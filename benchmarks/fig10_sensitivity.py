@@ -1,0 +1,36 @@
+"""Fig. 10 — RLP/TLP sensitivity, LLaMA-65B, creative-writing.
+(a) batch 4..128 at spec 1: AttAcc-only beats A100+AttAcc at batch 4, loses
+badly at high batch; PAPI best everywhere.
+(b) spec 1..8 at batch 4: PAPI's edge over A100+AttAcc shrinks as TLP grows
+(more FC kernels land on the GPU — convergence the paper predicts)."""
+from repro.configs.paper_models import LLAMA_65B
+from repro.core.system import compare_systems
+from repro.core.traces import generate_trace
+
+
+def rows():
+    trace = generate_trace("creative-writing", 128, seed=0)
+    out = []
+    for bs in (4, 16, 32, 64, 128):
+        res = compare_systems(LLAMA_65B, trace[:bs], bs, 1,
+                              systems=("papi", "a100_attacc", "attacc_only"))
+        papi = res["papi"].time_s
+        out.append((f"fig10a_b{bs}_a100attacc_over_papi",
+                    res["a100_attacc"].time_s / papi, ""))
+        out.append((f"fig10a_b{bs}_attacconly_over_papi",
+                    res["attacc_only"].time_s / papi, ""))
+    ratios = []
+    for sl in (1, 2, 4, 8):
+        res = compare_systems(LLAMA_65B, trace[:4], 4, sl,
+                              systems=("papi", "a100_attacc", "attacc_only"))
+        r = res["a100_attacc"].time_s / res["papi"].time_s
+        ratios.append(r)
+        out.append((f"fig10b_s{sl}_a100attacc_over_papi", r,
+                    "paper avg 1.5x; decreases with TLP"))
+        out.append((f"fig10b_s{sl}_attacconly_over_papi",
+                    res["attacc_only"].time_s / res["papi"].time_s,
+                    "paper avg 3.0x"))
+    out.append(("fig10b_speedup_decreases_with_tlp",
+                float(ratios[0] > ratios[-1]),
+                f"s1={ratios[0]:.2f} -> s8={ratios[-1]:.2f}"))
+    return out

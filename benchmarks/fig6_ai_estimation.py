@@ -1,0 +1,25 @@
+"""Fig. 6 — actual (Eq. 1) vs estimated (Eq. 2) arithmetic intensity for the
+GPT-3 66B FC kernel across RLP/TLP, plus the worst-case archs from the
+assignment pool (Eq. 2's large-h assumption is weakest at qwen2's h=896)."""
+from repro.configs import get_config
+from repro.configs.paper_models import GPT3_66B
+from repro.core.ai import fc_ai_estimate, fc_ai_exact
+
+
+def rows():
+    out = []
+    h = GPT3_66B.d_model
+    for rlp in (1, 4, 16, 64, 128):
+        for tlp in (1, 4, 8):
+            exact = fc_ai_exact(rlp * tlp, h)
+            est = fc_ai_estimate(rlp, tlp)
+            out.append((f"fig6_ai_rlp{rlp}_tlp{tlp}_exact", exact, ""))
+            out.append((f"fig6_ai_rlp{rlp}_tlp{tlp}_est", est,
+                        f"rel_err={(est - exact) / exact:.3f}"))
+    for arch in ("qwen2-0.5b", "command-r-plus-104b"):
+        hh = get_config(arch).d_model
+        exact = fc_ai_exact(64, hh)
+        out.append((f"fig6_relerr_{arch}_m64",
+                    (fc_ai_estimate(64, 1) - exact) / exact,
+                    f"h={hh}"))
+    return out

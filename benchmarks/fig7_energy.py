@@ -1,0 +1,21 @@
+"""Fig. 7 — PIM energy breakdown vs data reuse + power vs reuse per xPyB
+config.  (a) 96.7% DRAM at reuse=1; (b) 33.1% at reuse=64; (c) power curves
+against the 116 W HBM budget."""
+from repro.core import pim
+
+
+def rows():
+    out = []
+    for reuse in (1, 64):
+        eb = pim.energy_breakdown(reuse)
+        for k, v in eb.items():
+            paper = {"1dram": 0.967, "64dram": 0.331}.get(f"{reuse}{k}")
+            out.append((f"fig7_energy_frac_{k}_reuse{reuse}", v,
+                        f"paper={paper}" if paper else ""))
+    for reuse in (1, 2, 4, 8, 16, 64):
+        for dev in (pim.ATTACC, pim.HBM_PIM, pim.FC_PIM):
+            p = dev.power_at(reuse)
+            out.append((f"fig7c_power_{dev.name}_reuse{reuse}", p,
+                        "OVER" if p > pim.HBM_POWER_BUDGET_W else "within"))
+    out.append(("fig7_power_budget_w", pim.HBM_POWER_BUDGET_W, "HBM3 IDD7"))
+    return out

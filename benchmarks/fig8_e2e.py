@@ -1,0 +1,40 @@
+"""Fig. 8 — end-to-end decode speedup + energy efficiency on the Dolly
+creative-writing trace for LLaMA-65B / GPT-3 66B / GPT-3 175B, batch sizes
+{4,16,64} x speculation {1,2,4}, normalized to A100+AttAcc.
+
+Paper headline (averages over the setting grid): PAPI is 1.8x vs
+A100+AttAcc, 1.9x vs A100+HBM-PIM, 11.1x vs AttAcc-only; energy 3.4x vs
+A100+AttAcc."""
+import numpy as np
+
+from repro.configs.paper_models import GPT3_66B, GPT3_175B, LLAMA_65B
+from repro.core.system import compare_systems
+from repro.core.traces import generate_trace
+
+SETTINGS = [(b, s) for b in (4, 16, 64) for s in (1, 2, 4)]
+
+
+def rows():
+    trace = generate_trace("creative-writing", 64, seed=0)
+    out = []
+    speed = {"a100_attacc": [], "a100_hbmpim": [], "attacc_only": []}
+    energy = {"a100_attacc": []}
+    for cfg in (LLAMA_65B, GPT3_66B, GPT3_175B):
+        for bs, sl in SETTINGS:
+            res = compare_systems(cfg, trace[:bs], bs, sl)
+            papi = res["papi"]
+            for s in speed:
+                sp = res[s].time_s / papi.time_s
+                speed[s].append(sp)
+                out.append((f"fig8_speedup_vs_{s}_{cfg.name}_b{bs}_s{sl}",
+                            sp, "normalized to that baseline"))
+            energy["a100_attacc"].append(
+                res["a100_attacc"].energy_per_token / papi.energy_per_token)
+    for s, v in speed.items():
+        paper = {"a100_attacc": 1.8, "a100_hbmpim": 1.9,
+                 "attacc_only": 11.1}[s]
+        out.append((f"fig8_MEAN_speedup_vs_{s}", float(np.mean(v)),
+                    f"paper={paper}"))
+    out.append(("fig8_MEAN_energy_eff_vs_a100_attacc",
+                float(np.mean(energy["a100_attacc"])), "paper=3.4"))
+    return out

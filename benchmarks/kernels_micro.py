@@ -1,0 +1,37 @@
+"""Kernel microbenchmarks: the two FC paths (MXU dot vs fc_gemv) and the
+decode-attention / ssd kernels at smoke scale (CPU wall-clock; on TPU the
+same harness feeds calibrate_alpha_measured)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import fc_forward
+
+
+def _bench(fn, *args, reps=5):
+    fn(*args).block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def rows():
+    out = []
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (1024, 1024), jnp.float32) / 32
+    pu = jax.jit(lambda x: fc_forward(x, w, "pu"))
+    for m in (1, 8, 64):
+        x = jax.random.normal(k, (m, 1024), jnp.float32)
+        out.append((f"fc_pu_m{m}_us", _bench(pu, x), "XLA dot (MXU path)"))
+    # the pim path (interpret mode on CPU: correctness harness, not perf)
+    x = jax.random.normal(k, (8, 1024), jnp.float32)
+    t0 = time.perf_counter()
+    fc_forward(x, w, "pim", interpret=True).block_until_ready()
+    out.append(("fc_pim_m8_interpret_us", (time.perf_counter() - t0) * 1e6,
+                "Pallas interpret (CPU validation mode)"))
+    return out

@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [dir] [--markdown]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(f))
+        rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    out = ["| arch | cell | mesh | compute s | memory s | collective s | "
+           "bottleneck | useful | roofline | GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        ma = r["memory_analysis"].get("live_bytes_per_device", 0) or 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.2e} | {rl['memory_s']:.2e} "
+            f"| {rl['collective_s']:.2e} | {rl['bottleneck']} "
+            f"| {rl['useful_fraction']:.3f} "
+            f"| {100 * rl['roofline_fraction']:.2f}% | {ma / 1e9:.2f} |")
+    return "\n".join(out)
+
+
+def csv(rows: list[dict]) -> str:
+    out = ["arch,cell,mesh,compute_s,memory_s,collective_s,bottleneck,"
+           "useful_fraction,roofline_fraction,live_gb_per_dev,compile_s"]
+    for r in rows:
+        rl = r["roofline"]
+        ma = r["memory_analysis"].get("live_bytes_per_device", 0) or 0
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{rl['compute_s']:.4e},"
+            f"{rl['memory_s']:.4e},{rl['collective_s']:.4e},"
+            f"{rl['bottleneck']},{rl['useful_fraction']:.4f},"
+            f"{rl['roofline_fraction']:.5f},{ma / 1e9:.2f},{r['compile_s']}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load(dirname)
+    if "--markdown" in sys.argv:
+        print(markdown(rows))
+    else:
+        print(csv(rows))
+
+
+if __name__ == "__main__":
+    main()

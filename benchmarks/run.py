@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper figure/table.
+
+Prints ``name,value,derived`` CSV rows; MEAN rows carry the paper's reported
+number in the derived column for direct comparison (EXPERIMENTS.md §Repro).
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_roofline,
+        fig4_fc_latency,
+        fig6_ai_estimation,
+        fig7_energy,
+        fig8_e2e,
+        fig9_e2e_qa,
+        fig10_sensitivity,
+        fig11_pim_only,
+        fig12_breakdown,
+        kernels_micro,
+        scheduler_overhead,
+    )
+
+    modules = [
+        fig2_roofline, fig4_fc_latency, fig6_ai_estimation, fig7_energy,
+        fig8_e2e, fig9_e2e_qa, fig10_sensitivity, fig11_pim_only,
+        fig12_breakdown, scheduler_overhead, kernels_micro,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived")
+    for mod in modules:
+        if only and only not in mod.__name__:
+            continue
+        for name, value, derived in mod.rows():
+            print(f"{name},{value:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

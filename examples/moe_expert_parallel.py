@@ -1,0 +1,45 @@
+"""MoE + PAPI (§6.5): expert sparsity changes the scheduling decision.
+
+For an MoE arch the per-expert parallelism is RLP*TLP*top_k/E, so the same
+batch that is compute-bound for a dense model stays memory-bound for its
+expert FCs — PAPI's scheduler accounts for that via
+`core.ai.effective_parallelism`.  This example trains a small OLMoE-family
+model a few steps (router + capacity dispatch + aux loss all engaged), then
+contrasts the scheduling decision against a dense twin.
+
+    PYTHONPATH=src python examples/moe_expert_parallel.py
+"""
+from repro.configs import get_config
+from repro.core.ai import effective_parallelism
+from repro.core.scheduler import PapiScheduler
+from repro.data.pipeline import DataConfig
+from repro.training import AdamWConfig, TrainConfig, run_training
+
+def main():
+    moe = get_config("olmoe-1b-7b")
+    dense = get_config("granite-8b")
+
+    print("scheduling view at RLP=64, TLP=2 (alpha = 32):")
+    for cfg in (dense, moe):
+        eff = effective_parallelism(cfg, 64, 2)
+        sched = PapiScheduler(cfg, alpha=32.0, tlp=2)
+        sched.initial_schedule(64, 2)
+        print(f"  {cfg.name:16s} effective parallelism = {eff:6.1f} "
+              f"-> FC on {sched.fc_assignment!r}")
+    print("(the MoE's expert FCs stay on the memory-optimized path: "
+          "64*2*8/64 = 16 <= 32, exactly the paper's §6.5 observation)\n")
+
+    cfg = moe.reduced()
+    print(f"training reduced {cfg.name}: {cfg.param_count()/1e6:.1f}M params,"
+          f" {cfg.moe.num_experts} experts top-{cfg.moe.top_k}")
+    res = run_training(
+        cfg,
+        TrainConfig(steps=30, checkpoint_every=1000, log_every=10,
+                    checkpoint_dir="/tmp/repro_moe_ckpt", remat=False),
+        DataConfig(batch=4, seq_len=64),
+        AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30),
+    )
+    print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} over 30 steps")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Speculative decoding + continuous batching through the PAPI engine.
+
+A draft model proposes 3-token windows that the target verifies in a single
+TLP=3 decode step; the scheduler sees AI = RLP*TLP and keeps the FC kernels
+on the compute-optimized path while parallelism is high.  Requests arrive
+mid-flight (mixed continuous batching).
+
+    PYTHONPATH=src python examples/serve_speculative.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import PapiEngine, ServeRequest
+
+def main():
+    cfg = get_config("granite-8b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # self-draft (same weights) => high acceptance; a real deployment uses a
+    # distilled draft model
+    draft = (cfg, params)
+
+    engine = PapiEngine(
+        cfg, params, max_slots=4, cache_capacity=128, prefill_len=16,
+        alpha=6.0, spec_len=3, draft=draft,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        engine.submit(ServeRequest(
+            i, rng.integers(3, cfg.vocab_size, 8).tolist(),
+            max_new_tokens=18))
+
+    # run a few iterations, then new requests arrive mid-stream
+    for _ in range(3):
+        engine.step()
+    for i in range(4, 8):
+        engine.submit(ServeRequest(
+            i, rng.integers(3, cfg.vocab_size, 8).tolist(),
+            max_new_tokens=12))
+    results = engine.run()
+
+    print(f"{len(results)} requests done in {engine.iteration} iterations")
+    acc = [s.accepted for s in engine.stats if s.new_tokens > 0]
+    print(f"mean accepted tokens per 3-token window: {np.mean(acc):.2f}")
+    print(f"tokens/iteration: "
+          f"{sum(len(r.tokens) for r in results) / engine.iteration:.2f} "
+          "(>1 => speculative parallelism paying off)")
+
+if __name__ == "__main__":
+    main()

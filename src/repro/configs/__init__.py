@@ -1,0 +1,78 @@
+"""Architecture registry.
+
+`get_config(name)` resolves any assigned architecture or paper model;
+`ASSIGNED` lists the 10 assignment archs in assignment order.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeCell,
+    SSMConfig,
+    applicable_shapes,
+    microbatch_plan,
+    skipped_shapes,
+)
+from repro.configs.command_r_plus_104b import CONFIG as COMMAND_R_PLUS_104B
+from repro.configs.deepseek_67b import CONFIG as DEEPSEEK_67B
+from repro.configs.granite_8b import CONFIG as GRANITE_8B
+from repro.configs.granite_moe_1b_a400m import CONFIG as GRANITE_MOE_1B_A400M
+from repro.configs.hubert_xlarge import CONFIG as HUBERT_XLARGE
+from repro.configs.mamba2_1_3b import CONFIG as MAMBA2_1_3B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.paper_models import GPT3_66B, GPT3_175B, LLAMA_65B, OPT_30B
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_0_5B
+from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+from repro.configs.zamba2_1_2b import CONFIG as ZAMBA2_1_2B
+
+ASSIGNED: tuple[ModelConfig, ...] = (
+    QWEN2_0_5B,
+    COMMAND_R_PLUS_104B,
+    DEEPSEEK_67B,
+    GRANITE_8B,
+    ZAMBA2_1_2B,
+    GRANITE_MOE_1B_A400M,
+    OLMOE_1B_7B,
+    QWEN2_VL_7B,
+    HUBERT_XLARGE,
+    MAMBA2_1_3B,
+)
+
+PAPER_MODELS: tuple[ModelConfig, ...] = (LLAMA_65B, GPT3_66B, GPT3_175B, OPT_30B)
+
+_REGISTRY: dict[str, ModelConfig] = {c.name: c for c in ASSIGNED + PAPER_MODELS}
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve an architecture id (or `<id>-smoke` for its reduced twin)."""
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    raise KeyError(
+        f"unknown arch {name!r}; known: {sorted(_REGISTRY)}"
+    )
+
+
+def arch_names() -> list[str]:
+    return [c.name for c in ASSIGNED]
+
+
+__all__ = [
+    "ASSIGNED",
+    "PAPER_MODELS",
+    "SHAPES",
+    "HybridConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeCell",
+    "applicable_shapes",
+    "arch_names",
+    "get_config",
+    "microbatch_plan",
+    "skipped_shapes",
+]

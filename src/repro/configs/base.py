@@ -1,0 +1,348 @@
+"""Model/run configuration dataclasses.
+
+Every architecture in the assignment pool is expressed as a `ModelConfig`.
+The same dataclass drives:
+  * parameter init + forward/train/decode steps (models/),
+  * the serving engine (serving/),
+  * the dry-run input specs (launch/specs.py),
+  * the analytical roofline (launch/roofline.py) and the PAPI simulator
+    (core/), which needs the FC/attention kernel dimensions.
+
+Reduced ("smoke") variants are derived mechanically by `reduced()` so every
+architecture family has a CPU-runnable twin with the same code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    # Per-expert FFN hidden dim (the assignment's d_ff for MoE archs is
+    # per-expert).
+    d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # Load-balancing aux loss weight (Switch-style).
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block configuration."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk_size: int = 256
+    # A is initialized in [-A_max, -A_min] (log-spaced), per head.
+    a_min: float = 1.0
+    a_max: float = 16.0
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """zamba2-style hybrid layout: a backbone of Mamba2 blocks with a single
+    *shared* attention block applied every `period` backbone blocks."""
+    period: int = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int          # query heads; 0 for attention-free archs
+    num_kv_heads: int       # GQA KV heads
+    d_ff: int               # dense FFN hidden dim (0 for MoE: see moe.d_ff; 0 for ssm)
+    vocab_size: int
+
+    head_dim: int = 0       # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    mlp: Literal["swiglu", "gelu"] = "swiglu"
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    # M-RoPE (qwen2-vl): positions are (temporal, height, width) triples;
+    # head_dim is split into 3 frequency sections.
+    m_rope: bool = False
+    m_rope_sections: Sequence[int] = (16, 24, 24)
+    tie_embeddings: bool = False
+    causal: bool = True     # encoder-only archs set False
+    decoder: bool = True    # False -> encoder-only (no KV cache / decode step)
+    # Modality frontend stub: "token" (ids), "frame" (precomputed audio frame
+    # embeddings), "patch" (precomputed vision patch embeddings + text ids).
+    frontend: Literal["token", "frame", "patch"] = "token"
+
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: HybridConfig | None = None
+
+    # Training details
+    max_seq_len: int = 524_288
+    dtype: str = "bfloat16"
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def q_heads(self) -> int:
+        return self.num_heads
+
+    @property
+    def kv_heads(self) -> int:
+        return self.num_kv_heads
+
+    @property
+    def group_size(self) -> int:
+        if self.num_kv_heads == 0:
+            return 1
+        return max(self.num_heads // self.num_kv_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_subquadratic_path(self) -> bool:
+        """True if the arch can serve 500k-token contexts without a quadratic
+        KV-cache attention (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decode_step(self) -> bool:
+        return self.decoder
+
+    # ---- parameter counting (used for roofline MODEL_FLOPS and memory) ------
+    def param_count(self) -> int:
+        return sum(self._param_shapes_counts())
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        total = self.param_count()
+        if self.moe is None or self.moe.num_experts == 0:
+            return total
+        expert = self._moe_expert_params()
+        inactive = expert * (self.moe.num_experts - self.moe.top_k)
+        return total - inactive * self.num_layers
+
+    def _moe_expert_params(self) -> int:
+        m = self.moe
+        assert m is not None
+        # SwiGLU expert: gate + up + down
+        return 3 * self.d_model * m.d_ff
+
+    def _param_shapes_counts(self) -> list[int]:
+        h, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        counts = [self.vocab_size * h]  # embed
+        if not self.tie_embeddings and self.decoder:
+            counts.append(self.vocab_size * h)  # lm head
+        counts.append(h)  # final norm
+
+        def attn_params() -> int:
+            n = h * (self.num_heads * hd) + 2 * h * (self.num_kv_heads * hd)
+            n += (self.num_heads * hd) * h  # out proj
+            if self.qkv_bias:
+                n += self.num_heads * hd + 2 * self.num_kv_heads * hd
+            return n
+
+        def mlp_params() -> int:
+            if self.moe is not None and self.moe.num_experts:
+                m = self.moe
+                return m.num_experts * 3 * h * m.d_ff + h * m.num_experts
+            if self.mlp == "swiglu":
+                return 3 * h * self.d_ff
+            return 2 * h * self.d_ff + self.d_ff + h  # gelu w/ biases
+
+        def ssm_params() -> int:
+            s = self.ssm
+            assert s is not None
+            di = s.d_inner(h)
+            nh = s.n_heads(h)
+            # in_proj -> [z, x, B, C, dt]; conv over (x, B, C); out_proj
+            conv_dim = di + 2 * s.d_state * nh // (di // s.head_dim) if False else di + 2 * s.d_state
+            n = h * (2 * di + 2 * s.d_state + nh)
+            n += s.conv_kernel * conv_dim
+            n += nh * 2  # A_log, D
+            n += nh      # dt_bias
+            n += di * h  # out_proj
+            n += di      # gated-norm weight
+            return n
+
+        if self.family == "ssm":
+            counts += [ssm_params() + h for _ in range(L)]
+        elif self.family == "hybrid":
+            assert self.hybrid is not None
+            counts += [ssm_params() + h for _ in range(L)]
+            # one shared attention block (+ its MLP), applied every `period`
+            counts.append(attn_params() + 3 * h * self.d_ff + 2 * h)
+        else:
+            per_layer = attn_params() + mlp_params() + 2 * h
+            counts += [per_layer for _ in range(L)]
+        return counts
+
+    # ---- KV / state cache sizing --------------------------------------------
+    def kv_bytes_per_token(self, bytes_per_el: int = 2) -> int:
+        if self.family == "ssm":
+            return 0
+        hd = self.resolved_head_dim
+        n_attn = self.num_attention_applications()
+        return 2 * n_attn * self.num_kv_heads * hd * bytes_per_el
+
+    def num_attention_applications(self) -> int:
+        if self.family == "ssm":
+            return 0
+        if self.family == "hybrid":
+            assert self.hybrid is not None
+            return self.num_layers // self.hybrid.period
+        return self.num_layers
+
+    def ssm_state_bytes(self, bytes_per_el: int = 4) -> int:
+        if self.ssm is None:
+            return 0
+        s = self.ssm
+        nh = s.n_heads(self.d_model)
+        n_ssm = self.num_layers
+        return n_ssm * nh * s.head_dim * s.d_state * bytes_per_el
+
+    # ---- reduced (smoke) twin -----------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """A tiny config of the same family for CPU smoke tests."""
+        kw: dict = dict(
+            name=self.name + "-smoke",
+            family=self.family,
+            num_layers=min(self.num_layers, 2 if self.family != "hybrid" else 4),
+            d_model=128,
+            num_heads=4 if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=256,
+            head_dim=32 if self.num_heads else 0,
+            qkv_bias=self.qkv_bias,
+            attn_out_bias=self.attn_out_bias,
+            mlp=self.mlp,
+            norm=self.norm,
+            norm_eps=self.norm_eps,
+            rope_theta=self.rope_theta,
+            m_rope=self.m_rope,
+            m_rope_sections=(8, 12, 12) if self.m_rope else self.m_rope_sections,
+            tie_embeddings=self.tie_embeddings,
+            causal=self.causal,
+            decoder=self.decoder,
+            frontend=self.frontend,
+            max_seq_len=1024,
+            dtype="float32",
+        )
+        if self.num_kv_heads and self.num_heads:
+            # keep GQA ratio flavor: full MHA stays MHA
+            if self.num_kv_heads == self.num_heads:
+                kw["num_kv_heads"] = kw["num_heads"]
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_ff=64,
+                capacity_factor=self.moe.capacity_factor,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(
+                d_state=16, head_dim=32, expand=2,
+                conv_kernel=self.ssm.conv_kernel, chunk_size=32,
+            )
+        if self.hybrid is not None:
+            kw["hybrid"] = HybridConfig(period=2)
+        return ModelConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Shape cells that are runnable for this arch, per the assignment rules:
+    - `long_500k` only for sub-quadratic (ssm/hybrid) archs;
+    - decode shapes skipped for encoder-only archs."""
+    out = []
+    for name, cell in SHAPES.items():
+        if cell.is_decode and not cfg.has_decode_step:
+            continue
+        if name == "long_500k" and not cfg.has_subquadratic_path:
+            continue
+        out.append(name)
+    return out
+
+
+def skipped_shapes(cfg: ModelConfig) -> list[tuple[str, str]]:
+    out = []
+    for name, cell in SHAPES.items():
+        if cell.is_decode and not cfg.has_decode_step:
+            out.append((name, "encoder-only: no decode step"))
+        elif name == "long_500k" and not cfg.has_subquadratic_path:
+            out.append((name, "full attention is quadratic at 500k; "
+                              "sub-quadratic path required"))
+    return out
+
+
+def microbatch_plan(cfg: ModelConfig, cell: ShapeCell, data_shards: int) -> tuple[int, int]:
+    """(num_microbatches, per_step_batch) for training cells.
+
+    Chosen so activation working set stays within HBM at the production mesh:
+    big models accumulate gradients over more microbatches.
+    """
+    if cell.kind != "train":
+        return 1, cell.global_batch
+    approx_params = cfg.param_count()
+    if approx_params > 50e9:
+        accum = 8
+    elif approx_params > 5e9:
+        accum = 4
+    elif approx_params > 1e9:
+        accum = 2
+    else:
+        accum = 1
+    # big-vocab logits dominate activation memory: bound them per microbatch
+    if cfg.vocab_size >= 100_000:
+        accum = max(accum, 4)
+    # keep microbatch divisible by data shards
+    while (cell.global_batch // accum) % data_shards and accum > 1:
+        accum //= 2
+    return accum, cell.global_batch // accum

@@ -1,0 +1,32 @@
+"""The paper's primary contribution: PAPI's online arithmetic-intensity
+estimation, dynamic parallelism-aware scheduling, hybrid-PIM device models,
+and the end-to-end system simulators that reproduce its evaluation."""
+from repro.core.ai import (
+    attention_ai,
+    effective_parallelism,
+    fc_ai_estimate,
+    fc_ai_exact,
+)
+from repro.core.calibration import (
+    calibrate_alpha_measured,
+    calibrate_alpha_model,
+)
+from repro.core.scheduler import ATTN_PIM, FC_PIM, FC_PU, PapiScheduler
+from repro.core.system import (
+    SYSTEMS,
+    SimResult,
+    calibrate_alpha_system,
+    compare_systems,
+    simulate_decode,
+    simulate_prefill_gpu,
+)
+from repro.core.traces import Request, generate_trace
+
+__all__ = [
+    "ATTN_PIM", "FC_PIM", "FC_PU", "SYSTEMS",
+    "PapiScheduler", "Request", "SimResult",
+    "attention_ai", "calibrate_alpha_measured", "calibrate_alpha_model",
+    "calibrate_alpha_system", "compare_systems", "effective_parallelism",
+    "fc_ai_estimate", "fc_ai_exact", "generate_trace", "simulate_decode",
+    "simulate_prefill_gpu",
+]

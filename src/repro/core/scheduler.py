@@ -1,0 +1,121 @@
+"""PAPI's dynamic parallelism-aware scheduler (§4.1, §5.2).
+
+The paper's mechanism, faithfully:
+
+* a `TLP register` updated by the host when the speculation length changes;
+* RLP tracked by counting <|eos|> tokens in the gathered output vector after
+  every decoding iteration (token-level scheduling, §5.2.2) and bumped when
+  continuous batching admits new requests;
+* the O(1) arithmetic-intensity estimate AI ~= RLP * TLP (Eq. 2), corrected
+  for MoE expert sparsity per §6.5 (see `core.ai.effective_parallelism`);
+* a calibrated memory-boundedness threshold alpha: AI > alpha => the FC
+  kernel is compute-bound => run it on the PUs (MXU path); otherwise run it
+  on FC-PIM (the weight-streaming fc_gemv path).  Attention is *always*
+  memory-bound and pinned to Attn-PIM (the flash-decode kernel next to the
+  KV shard).
+
+The decision is host-side and O(batch) per iteration; both kernel variants
+are pre-compiled, so a reschedule costs nothing but the dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.ai import effective_parallelism
+
+FC_PU = "pu"        # compute-bound  -> high-performance processor (MXU)
+FC_PIM = "pim"      # memory-bound   -> FC-PIM (weight-streaming kernel)
+ATTN_PIM = "attn_pim"
+
+
+@dataclasses.dataclass
+class SchedulerEvent:
+    iteration: int
+    rlp: int
+    tlp: int
+    ai_estimate: float
+    assignment: str
+    rescheduled: bool
+
+
+@dataclasses.dataclass
+class PapiScheduler:
+    """Online kernel-to-hardware scheduler."""
+    cfg: ModelConfig
+    alpha: float                       # memory-boundedness threshold
+    tlp: int = 1                       # the TLP register (§5.2.2)
+    rlp: int = 0
+    iteration: int = 0
+    eos_token: int = 2
+
+    def __post_init__(self) -> None:
+        self._assignment = self._decide()
+        self.events: list[SchedulerEvent] = []
+        self.num_reschedules = 0
+
+    # -- §5.2.1 initial scheduling -------------------------------------------
+    def initial_schedule(self, batch_size: int, spec_len: int) -> str:
+        self.rlp = batch_size
+        self.tlp = spec_len
+        self.iteration = 0
+        self._assignment = self._decide()
+        self._log(rescheduled=False)
+        return self._assignment
+
+    # -- §5.2.2 runtime scheduling -------------------------------------------
+    def set_tlp(self, tlp: int) -> None:
+        """Host CPU writes the TLP register.  A TLP change is a monitored
+        parallelism change (§5.2.2), so the identification step runs
+        immediately."""
+        self.tlp = int(tlp)
+        new = self._decide()
+        if new != self._assignment:
+            self.num_reschedules += 1
+            self._assignment = new
+            self._log(rescheduled=True)
+
+    def observe_outputs(self, output_tokens: Sequence[int],
+                        admitted: int = 0) -> str:
+        """After each decoding iteration: gather the batch's new tokens,
+        count <|eos|> occurrences (step 1-2 of §5.2.2), fold in any newly
+        admitted requests (mixed continuous batching), re-estimate AI and
+        reschedule if the boundedness class flipped (steps 3-4)."""
+        finished = sum(1 for t in output_tokens if t == self.eos_token)
+        return self.observe_counts(finished, admitted)
+
+    def observe_counts(self, finished: int, admitted: int = 0) -> str:
+        self.iteration += 1
+        self.rlp = max(self.rlp - finished + admitted, 0)
+        new = self._decide()
+        rescheduled = new != self._assignment
+        if rescheduled:
+            self.num_reschedules += 1
+        self._assignment = new
+        self._log(rescheduled)
+        return new
+
+    # -- decision --------------------------------------------------------------
+    @property
+    def ai_estimate(self) -> float:
+        return effective_parallelism(self.cfg, self.rlp, self.tlp)
+
+    def _decide(self) -> str:
+        return FC_PU if self.ai_estimate > self.alpha else FC_PIM
+
+    @property
+    def fc_assignment(self) -> str:
+        return self._assignment
+
+    @property
+    def attention_assignment(self) -> str:
+        # Attention is always memory-bound (§4.1): pinned to Attn-PIM.
+        return ATTN_PIM
+
+    def _log(self, rescheduled: bool) -> None:
+        self.events.append(SchedulerEvent(
+            iteration=self.iteration, rlp=self.rlp, tlp=self.tlp,
+            ai_estimate=self.ai_estimate, assignment=self._assignment,
+            rescheduled=rescheduled,
+        ))

@@ -1,0 +1,3 @@
+from repro.kernels.ops import decode_attention, fc_forward, fc_gemv, ssd_scan
+
+__all__ = ["decode_attention", "fc_forward", "fc_gemv", "ssd_scan"]

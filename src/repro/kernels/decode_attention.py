@@ -1,0 +1,129 @@
+"""Flash-decode GQA attention Pallas kernel — the Attn-PIM analogue.
+
+PAPI's Attn-PIM executes attention *next to the KV data* with modest compute
+(1 FPU / 2 banks), because decode attention is always memory-bound: each KV
+byte is read once per query.  The TPU-native translation is a kernel whose
+HBM traffic is exactly one streaming pass over the KV cache, with the online
+softmax state held in VMEM:
+
+  grid = (batch, kv_heads, S // block_k)   last axis innermost/sequential
+  K/V blocks:  [block_k, hd]   streamed HBM -> VMEM once
+  Q block:     [g, hd]         (g = grouped query heads) pinned per (b, h)
+  scratch:     acc [g, hd] f32, m/l [g, 128] f32 running softmax state
+
+Masking uses per-request cache lengths (continuous batching => ragged),
+delivered via scalar-prefetch-style SMEM block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    lens_ref,      # SMEM [1, 1] int32 — this request's cache length
+    q_ref,         # [1, 1, g, hd]
+    k_ref,         # [1, block_k, 1, hd]
+    v_ref,         # [1, block_k, 1, hd]
+    o_ref,         # [1, 1, g, hd]
+    acc_ref,       # VMEM [g, hd] f32
+    m_ref,         # VMEM [g, 128] f32 (lane-padded running max)
+    l_ref,         # VMEM [g, 128] f32 (lane-padded running sum)
+    *,
+    block_k: int,
+    num_kb: int,
+):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # [g, hd]
+    k = k_ref[0, :, 0]                                # [block_k, hd]
+    v = v_ref[0, :, 0]                                # [block_k, hd]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                         # [g, block_k]
+
+    length = lens_ref[0, 0]
+    kv_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kv_pos < length, s, NEG_INF)
+
+    m_prev = m_ref[:, 0:1]                            # [g, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)        # [g, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                            # [g, block_k]
+    alpha = jnp.exp(m_prev - m_new)                   # [g, 1]
+
+    l_new = l_ref[:, 0:1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # [g, hd]
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == num_kb - 1)
+    def _finalize():
+        l = l_ref[:, 0:1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,          # [b, nkv, g, hd]
+    k_cache: jax.Array,    # [b, S, nkv, hd]
+    v_cache: jax.Array,    # [b, S, nkv, hd]
+    lens: jax.Array,       # [b] int32 valid lengths
+    *,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, nkv, g, hd = q.shape
+    skv = k_cache.shape[1]
+    block_k = min(block_k, skv)
+    assert skv % block_k == 0, (skv, block_k)
+    num_kb = skv // block_k
+    lens2 = lens.astype(jnp.int32).reshape(b, 1)
+
+    grid = (b, nkv, num_kb)
+    kernel = functools.partial(_kernel, block_k=block_k, num_kb=num_kb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kb: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, kb: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda i, j, kb: (i, kb, j, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda i, j, kb: (i, kb, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, kb: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="papi_decode_attention",
+    )(lens2, q, k_cache, v_cache)

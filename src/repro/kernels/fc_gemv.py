@@ -1,0 +1,81 @@
+"""Weight-streaming skinny matmul Pallas kernel — the FC-PIM analogue.
+
+PAPI's FC-PIM executes the FC kernel when it is memory-bound (low RLP*TLP):
+each weight element is read from DRAM once and reused across the few
+activation rows.  The TPU translation: a matmul kernel organized so the
+weight matrix makes exactly one HBM -> VMEM pass, with the skinny activation
+block pinned in VMEM for the whole kernel:
+
+  grid = (N // block_n, K // block_k)    k innermost (accumulate in scratch)
+  x block: [m, block_k]      m = RLP*TLP rows, pinned (same block all n)
+  w block: [block_k, block_n] streamed once
+  acc:     [m, block_n] f32 scratch
+
+When RLP*TLP is large the MXU path (plain jnp.dot / XLA) wins — that flip is
+exactly PAPI's scheduling decision, made by `core.scheduler` and validated by
+`core.calibration` on this very pair of implementations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, num_kb: int):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kb == num_kb - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n", "interpret"))
+def fc_gemv(
+    x: jax.Array,      # [m, K]  (m = RLP*TLP, small)
+    w: jax.Array,      # [K, N]
+    *,
+    block_k: int = 512,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    block_k = min(block_k, K)
+    block_n = min(block_n, N)
+    assert K % block_k == 0 and N % block_n == 0, (K, N, block_k, block_n)
+    num_kb = K // block_k
+
+    grid = (N // block_n, num_kb)
+    kernel = functools.partial(_kernel, num_kb=num_kb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda n, k: (0, k)),
+            pl.BlockSpec((block_k, block_n), lambda n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((m, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="papi_fc_gemv",
+    )(x, w)

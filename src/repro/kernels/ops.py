@@ -1,0 +1,32 @@
+"""Jit'd public wrappers over the Pallas kernels with backend dispatch.
+
+On TPU the Pallas kernels run compiled (Mosaic); on CPU — including the
+multi-pod dry-run, which lowers the XLA path — they run in interpret mode
+for validation, or the callers use the pure-XLA equivalents in
+`repro.models.layers` / `repro.models.ssm`.
+
+`fc_variant` is the runtime switch the PAPI scheduler flips: "pim" selects
+the weight-streaming fc_gemv kernel (memory-bound regime), "pu" the plain
+MXU dot (compute-bound regime).  Both produce identical numerics (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fc_gemv import fc_gemv
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["decode_attention", "fc_gemv", "ssd_scan", "fc_forward"]
+
+
+def fc_forward(x: jax.Array, w: jax.Array, variant: str = "pu",
+               interpret: bool | None = None) -> jax.Array:
+    """FC kernel with PAPI's two execution paths.
+
+    x: [m, K], w: [K, N].  variant in {"pu", "pim"}.
+    """
+    if variant == "pim":
+        return fc_gemv(x, w, interpret=interpret)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

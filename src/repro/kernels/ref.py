@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the trusted direct implementations: no blocking, no online
+softmax, no chunking — just the mathematical definition.  Every kernel test
+sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,          # [b, nkv, g, hd]  (one decode token, GQA-grouped)
+    k_cache: jax.Array,    # [b, S, nkv, hd]
+    v_cache: jax.Array,    # [b, S, nkv, hd]
+    lens: jax.Array,       # [b] valid cache lengths
+) -> jax.Array:            # [b, nkv, g, hd]
+    b, nkv, g, hd = q.shape
+    skv = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhgk,bshk->bhgs", q, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(skv)[None, :] < lens[:, None]            # [b, S]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshk->bhgk", p.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
+def fc_gemv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [m, K] @ w: [K, N] with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ssd_scan_ref(
+    dtx: jax.Array,   # [b, nh, l, hp]   dt_t * x_t
+    lt: jax.Array,    # [b, nh, l]       dt_t * A_h  (log-decay, f32)
+    B: jax.Array,     # [b, l, n]
+    C: jax.Array,     # [b, l, n]
+) -> jax.Array:       # [b, nh, l, hp]
+    """Sequential SSD recurrence — the definitional oracle.
+
+    S_t = exp(lt_t) * S_{t-1} + dtx_t outer B_t ;  y_t = S_t @ C_t
+    """
+    b, nh, l, hp = dtx.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+
+    def step(s, inp):
+        dtx_t, lt_t, B_t, C_t = inp
+        s = jnp.exp(lt_t)[..., None, None] * s + jnp.einsum(
+            "bhp,bn->bhpn", dtx_t.astype(f32), B_t.astype(f32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", s, C_t.astype(f32))
+        return s, y
+
+    s0 = jnp.zeros((b, nh, hp, n), f32)
+    xs = (
+        jnp.moveaxis(dtx, 2, 0),
+        jnp.moveaxis(lt, 2, 0).astype(f32),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(dtx.dtype)

@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production meshes, prove memory/sharding coherence, and
+extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the dry-run needs 512 placeholder
+host devices to build the (2, 16, 16) production mesh.  Nothing else in the
+repo sets this flag (smoke tests and benches see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, applicable_shapes, get_config
+from repro.launch.hlo import HLOAnalysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    Roofline,
+    compulsory_hbm_bytes_per_chip,
+    model_flops,
+)
+from repro.launch.steps import build_step, lower_step
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:          # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes"):
+        if hasattr(ma, key):
+            out[key] = int(getattr(ma, key))
+    if out:
+        # arguments + temps - donated aliases = live bytes per device
+        out["live_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+    t0 = time.time()
+    built = build_step(cfg, cell, mesh)
+    lowered = lower_step(built, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _memory_analysis_dict(compiled)
+    try:
+        cost = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    hlo = HLOAnalysis(compiled.as_text(), num_devices=chips)
+    summary = hlo.summary()
+    # post-SPMD HLO shapes are per-partition: scale to global FLOPs so that
+    # replicated (unsharded) compute shows up as redundancy in the ratio.
+    summary["flops"] = summary["flops"] * chips
+
+    mf = model_flops(cfg, cell)
+    rl = Roofline(
+        arch=arch, cell=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=summary["flops"],
+        model_flops=mf,
+        hbm_bytes_per_chip=compulsory_hbm_bytes_per_chip(
+            cfg, cell, chips, built.accum),
+        wire_bytes_per_chip=summary["collective_wire_bytes_per_device"],
+        memory_residency_per_chip=mem.get("live_bytes_per_device"),
+    )
+
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+        "kind": built.kind, "accum": built.accum,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "xla_cost_analysis": {k: cost[k] for k in ("flops", "bytes accessed")
+                              if k in cost},
+        "hlo": summary,
+        "collective_sites": hlo.collective_sites(8),
+        "roofline": rl.row(),
+    }
+    if verbose:
+        ma = mem.get("live_bytes_per_device")
+        print(f"[dryrun] {arch:24s} {shape:12s} mesh={mesh_name:10s} "
+              f"OK  compile={t_compile:6.1f}s "
+              f"live/dev={ma/1e9 if ma else float('nan'):6.2f}GB "
+              f"bottleneck={rl.bottleneck:10s} "
+              f"roofline_frac={rl.roofline_fraction:.3f}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  hlo: flops={summary['flops']:.3e} "
+              f"wire_bytes/dev={summary['collective_wire_bytes_per_device']:.3e} "
+              f"{summary['collective_breakdown']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{mesh_name}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    if args.all:
+        for cfg in ASSIGNED:
+            for shape in applicable_shapes(cfg):
+                for mp in meshes:
+                    cells.append((cfg.name, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = []
+    for arch, shape, mp in cells:
+        try:
+            run_cell(arch, shape, mp, args.out)
+        except Exception:
+            failures.append((arch, shape, mp))
+            print(f"[dryrun] {arch} {shape} multi_pod={mp} FAILED")
+            traceback.print_exc()
+    print(f"\n[dryrun] {len(cells) - len(failures)}/{len(cells)} cells passed")
+    for f in failures:
+        print("  FAILED:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

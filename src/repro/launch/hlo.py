@@ -1,0 +1,306 @@
+"""Optimized-HLO text analysis: FLOPs, collective wire bytes, while-loop
+trip counts — the dry-run profiler (no real hardware, the IR is the trace).
+
+XLA's built-in cost analysis visits while bodies ONCE; for scan-over-layers
+programs that undercounts by num_layers.  This parser builds the call graph
+(entry -> fusions/calls/while bodies), recovers trip counts from while
+*condition* computations (`compare(iv, constant(N)), direction=LT`), and
+propagates costs bottom-up with multipliers.
+
+Counted:
+  * dot FLOPs: 2 * prod(output shape) * prod(lhs contracting dims)
+  * collective wire bytes per participating device, ring-model factors:
+      all-gather       (g-1)/g * out_bytes
+      reduce-scatter   (g-1)/g * in_bytes
+      all-reduce       2 (g-1)/g * bytes
+      all-to-all       (g-1)/g * bytes
+      collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)%?([\w\.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_elems(dtype: str, dims: str) -> tuple[int, int]:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, _DTYPE_BYTES.get(dtype, 4) * n
+
+
+def _first_shape(line: str, after: str = "=") -> tuple[int, int] | None:
+    """(elements, bytes) of the first shape literal after `after`."""
+    idx = line.find(after)
+    m = _SHAPE_RE.search(line, idx + 1)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    return _shape_elems(m.group(1), m.group(2))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    collective_bytes: float = 0.0           # wire bytes per device
+    collective_ops: dict | None = None
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.collective_bytes += other.collective_bytes
+        for k, v in (other.collective_ops or {}).items():
+            self.collective_ops[k] = self.collective_ops.get(k, 0.0) + v
+        return self
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota form [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def _dot_flops(line: str, shapes: dict[str, list[int]]) -> float:
+    out = _first_shape(line, "=")
+    if out is None:
+        return 0.0
+    out_elems = out[0]
+    # post-optimization HLO prints operands as bare names: resolve the lhs
+    # shape through the per-computation shape table.
+    m = re.search(r"dot\(%?([\w\.\-]+)", line)
+    if not m:
+        return 0.0
+    lhs_dims = shapes.get(m.group(1))
+    if lhs_dims is None:
+        return 0.0
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if mc:
+        for d in mc.group(1).split(","):
+            if d:
+                contract *= lhs_dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+class HLOAnalysis:
+    def __init__(self, hlo_text: str, num_devices: int):
+        self.num_devices = num_devices
+        self.computations: dict[str, list[str]] = {}
+        self.trip_counts: dict[str, float] = {}
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self.entry_cost = self._cost(self.entry)
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        current = None
+        self.entry = None
+        self.shapes: dict[str, list[int]] = {}
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("//"):
+                continue
+            if line.startswith(("HloModule",)):
+                continue
+            head = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+            if head and not line.startswith("ROOT") and "= " not in line.split("{")[0]:
+                current = head.group(2)
+                self.computations[current] = []
+                if head.group(1):
+                    self.entry = current
+                continue
+            if line.startswith("}"):
+                continue
+            if current is not None:
+                self.computations[current].append(line)
+                ms = re.match(
+                    r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\]", line)
+                if ms and ms.group(2) in _DTYPE_BYTES:
+                    self.shapes[ms.group(1)] = [
+                        int(d) for d in ms.group(3).split(",") if d]
+        if self.entry is None:
+            # fall back: computation literally named main
+            for name in self.computations:
+                if "main" in name:
+                    self.entry = name
+                    break
+
+    def _cond_trip_count(self, cond_name: str) -> float:
+        """Largest plausible integer constant in the while condition ~ trip
+        count (scan bounds; sentinel constants like INT_MAX are ignored)."""
+        best = 1
+        for line in self.computations.get(cond_name, ()):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                v = int(m.group(1))
+                if v <= 1_000_000:
+                    best = max(best, v)
+        return float(best)
+
+    # ---------------------------------------------------------------- cost
+    def _cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost(collective_ops={})
+        self._memo[comp] = total     # break cycles defensively
+        for line in self.computations.get(comp, ()):
+            op = self._opcode(line)
+            if op == "while":
+                body = self._called(line, "body=")
+                cond = self._called(line, "condition=")
+                trips = self._cond_trip_count(cond) if cond else 1.0
+                if body:
+                    sub = self._cost(body)
+                    total += Cost(
+                        sub.flops * trips, sub.collective_bytes * trips,
+                        {k: v * trips for k, v in sub.collective_ops.items()},
+                    )
+                continue
+            if op == "dot":
+                total += Cost(_dot_flops(line, self.shapes), 0.0, {})
+            elif op in ("all-gather", "all-gather-start"):
+                sh = _first_shape(line)
+                if sh:
+                    g = _group_size(line, self.num_devices)
+                    wire = sh[1] * (g - 1) / g
+                    total += Cost(0.0, wire, {"all-gather": wire})
+            elif op in ("all-reduce", "all-reduce-start"):
+                sh = _first_shape(line)
+                if sh:
+                    g = _group_size(line, self.num_devices)
+                    wire = 2.0 * sh[1] * (g - 1) / g
+                    total += Cost(0.0, wire, {"all-reduce": wire})
+            elif op == "reduce-scatter":
+                sh = _first_shape(line)   # output (already scattered)
+                if sh:
+                    g = _group_size(line, self.num_devices)
+                    wire = sh[1] * (g - 1)
+                    total += Cost(0.0, wire, {"reduce-scatter": wire})
+            elif op == "all-to-all":
+                sh = _first_shape(line)
+                if sh:
+                    g = _group_size(line, self.num_devices)
+                    wire = sh[1] * (g - 1) / g
+                    total += Cost(0.0, wire, {"all-to-all": wire})
+            elif op in ("collective-permute", "collective-permute-start"):
+                sh = _first_shape(line)
+                if sh:
+                    total += Cost(0.0, sh[1], {"collective-permute": sh[1]})
+            # descend into fusions / calls / conditionals (cost counted once
+            # per call site; XLA emits one op line per call site)
+            for target in self._all_called(line, op):
+                total += self._cost(target)
+        self._memo[comp] = total
+        return total
+
+    @staticmethod
+    def _opcode(line: str) -> str:
+        # strip /*index=N*/ comments inside tuple types, then take the first
+        # lowercase identifier followed by '(' after the '=' — type literals
+        # (f32[...], pred[...]) never match because they end in '['.
+        line = re.sub(r"/\*.*?\*/", "", line)
+        eq = line.find("= ")
+        if eq < 0:
+            return ""
+        m = re.search(r"([a-z][\w\-]*)\(", line[eq + 2:])
+        return m.group(1) if m else ""
+
+    def _called(self, line: str, key: str) -> str | None:
+        idx = line.find(key)
+        if idx < 0:
+            return None
+        m = re.match(r"%?([\w\.\-]+)", line[idx + len(key):])
+        return m.group(1) if m else None
+
+    def _all_called(self, line: str, op: str) -> list[str]:
+        if op == "while":
+            return []
+        out = []
+        for key in ("calls=", "to_apply="):
+            t = self._called(line, key)
+            # reducers (to_apply of reduce/all-reduce) are trivial adds —
+            # still descended; they contain no dots/collectives.
+            if t:
+                out.append(t)
+        m = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if m:
+            out += [x.strip().lstrip("%") for x in m.group(1).split(",")]
+        return out
+
+    # --------------------------------------------------------------- report
+    def summary(self) -> dict:
+        return {
+            "flops": self.entry_cost.flops,
+            "collective_wire_bytes_per_device": self.entry_cost.collective_bytes,
+            "collective_breakdown": dict(self.entry_cost.collective_ops),
+        }
+
+    def collective_sites(self, top: int = 12) -> list[dict]:
+        """Per-site wire bytes x loop multiplier — the §Perf debugging view:
+        which collective, in which loop nest, moves the bytes."""
+        mults: dict[str, float] = defaultdict(float)
+        mults[self.entry] = 1.0
+        order = [self.entry]
+        seen = {self.entry}
+        i = 0
+        while i < len(order):          # BFS over the call graph
+            comp = order[i]
+            i += 1
+            for line in self.computations.get(comp, ()):
+                op = self._opcode(line)
+                if op == "while":
+                    body = self._called(line, "body=")
+                    cond = self._called(line, "condition=")
+                    trips = self._cond_trip_count(cond) if cond else 1.0
+                    if body:
+                        mults[body] += mults[comp] * trips
+                        if body not in seen:
+                            seen.add(body)
+                            order.append(body)
+                else:
+                    for t in self._all_called(line, op):
+                        mults[t] += mults[comp]
+                        if t not in seen:
+                            seen.add(t)
+                            order.append(t)
+        sites = []
+        for comp, lines in self.computations.items():
+            if comp not in mults:
+                continue
+            for line in lines:
+                op = self._opcode(line)
+                if op.split("-start")[0] not in (
+                    "all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute",
+                ):
+                    continue
+                sh = _first_shape(line)
+                if not sh:
+                    continue
+                mname = re.search(r'op_name="([^"]*)"', line)
+                sites.append({
+                    "op": op, "comp": comp, "mult": mults[comp],
+                    "bytes_per_exec": sh[1],
+                    "total_bytes": sh[1] * mults[comp],
+                    "op_name": (mname.group(1)[-120:] if mname else ""),
+                })
+        sites.sort(key=lambda s: -s["total_bytes"])
+        return sites[:top]

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = (data, model) = 256 chips.
+    Multi-pod: (2, 16, 16) = (pod, data, model) = 512 chips; the `pod` axis
+    carries data parallelism across the DCN/ICI-superpod boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices this host actually has, as a 1D data mesh — used by
+    the runnable examples on CPU."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

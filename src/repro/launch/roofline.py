@@ -1,0 +1,148 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HBM bytes / (chips x 819 GB/s)
+    collective term = wire bytes per chip / 50 GB/s per link
+
+HLO_FLOPs and collective bytes come from the HLO parser (`launch.hlo`) with
+while-loop trip multipliers.  The memory term uses the *compulsory* HBM
+traffic of the program (weights read once per step, KV cache read+written,
+microbatch activation checkpoints spilled once each) — the roofline floor a
+perfect fusion could reach; `memory_analysis()` per-device residency is
+reported alongside as the capacity check.
+
+MODEL_FLOPS = 6*N*D (dense train; N = active params, D = tokens) or 2*N*D
+(forward-only) measures how much of the compiled compute is "useful" —
+catching remat recompute and causal-mask waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    model_flops: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    memory_residency_per_chip: float | None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat & masking waste shows up here)."""
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOP/s at the bound, as a fraction of peak compute:
+        the report's headline 'how close to roofline' number."""
+        useful_per_chip = self.model_flops / self.chips
+        return useful_per_chip / (self.bound_s * PEAK_FLOPS)
+
+    def row(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "cell": self.cell, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """6*N_active*D for training, 2*N_active*D for forward-only, plus the
+    attention term 12*L_attn*h*s*D_factor where applicable."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        base = 6.0 * n * tokens
+        attn = (12.0 * cfg.num_attention_applications()
+                * cfg.num_heads * cfg.resolved_head_dim
+                * cell.seq_len * tokens / 2)      # causal: half the square
+        return base + attn
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        base = 2.0 * n * tokens
+        attn = (4.0 * cfg.num_attention_applications()
+                * cfg.num_heads * cfg.resolved_head_dim
+                * cell.seq_len * tokens / 2)
+        return base + attn
+    # decode: one token per request against a seq_len cache
+    tokens = cell.global_batch
+    base = 2.0 * n * tokens
+    attn = (4.0 * cfg.num_attention_applications()
+            * cfg.num_heads * cfg.resolved_head_dim
+            * cell.seq_len * tokens)
+    return base + attn
+
+
+def compulsory_hbm_bytes_per_chip(cfg: ModelConfig, cell: ShapeCell,
+                                  chips: int, accum: int) -> float:
+    """Minimal HBM traffic per chip per step (roofline memory floor).
+
+    train:   weights read fwd+bwd per microbatch (sharded across chips) +
+             grads/opt state read+write + saved residual stream per layer
+    prefill: weights once + KV cache write + activations streamed
+    decode:  weights once + KV cache read (the dominant term) + write of 1
+    """
+    el = jnp.dtype(cfg.dtype).itemsize
+    pbytes = cfg.param_count() * el
+    n_layers = max(cfg.num_layers, 1)
+    d = cfg.d_model
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        weights = pbytes * 2 * accum          # fwd + bwd read per microbatch
+        optim = pbytes * 2 + cfg.param_count() * 4 * 2 * 2   # grad + m/v rw
+        resid = tokens * d * el * n_layers * 2               # save + reload
+        total = weights + optim + resid
+        return total / chips
+    kv_per_tok = cfg.kv_bytes_per_token(el)
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        weights = pbytes
+        kv_write = tokens * kv_per_tok
+        resid = tokens * d * el * n_layers
+        return (weights + kv_write + resid) / chips
+    # decode
+    kv_read = cell.global_batch * cell.seq_len * kv_per_tok
+    ssm = cell.global_batch * cfg.ssm_state_bytes() * 2
+    weights = pbytes
+    return (weights + kv_read + ssm) / chips

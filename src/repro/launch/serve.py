@@ -1,0 +1,66 @@
+"""Serving launcher: runs the PAPI engine against a synthetic request trace.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
+        --requests 16 --spec-len 3 --alpha 6
+
+Prints per-iteration scheduler decisions (RLP, TLP, AI estimate, chosen FC
+path) — the runtime view of Figure 5(d).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.traces import generate_trace
+from repro.models import init_params
+from repro.serving import PapiEngine, ServeRequest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=6.0)
+    ap.add_argument("--spec-len", type=int, default=1)
+    ap.add_argument("--draft-arch", default=None)
+    ap.add_argument("--task", default="general-qa")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    draft = None
+    if args.draft_arch:
+        dcfg = get_config(args.draft_arch)
+        draft = (dcfg, init_params(dcfg, jax.random.PRNGKey(args.seed + 1)))
+
+    eng = PapiEngine(
+        cfg, params, max_slots=args.max_slots, cache_capacity=256,
+        prefill_len=32, alpha=args.alpha, spec_len=args.spec_len,
+        draft=draft,
+    )
+    rng = np.random.default_rng(args.seed)
+    for i, req in enumerate(generate_trace(args.task, args.requests,
+                                           args.seed)):
+        prompt = rng.integers(3, cfg.vocab_size, size=min(req.input_len, 32))
+        eng.submit(ServeRequest(i, prompt.tolist(),
+                                max_new_tokens=min(req.output_len, 64)))
+
+    results = eng.run(max_iterations=2000)
+    print(f"\ncompleted {len(results)} requests in {eng.iteration} iterations")
+    tok = sum(len(r.tokens) for r in results)
+    wall = sum(s.wall_s for s in eng.stats)
+    print(f"tokens: {tok}  wall: {wall:.2f}s  tok/s: {tok / max(wall, 1e-9):.1f}")
+    print(f"reschedules: {eng.scheduler.num_reschedules}")
+    print("\niter  rlp tlp    AI  fc_path  new_toks")
+    for s in eng.stats[:: max(len(eng.stats) // 20, 1)]:
+        print(f"{s.iteration:5d} {s.rlp:4d} {s.tlp:3d} {s.ai_estimate:5.1f}  "
+              f"{s.fc_variant:7s} {s.new_tokens:5d}")
+
+
+if __name__ == "__main__":
+    main()

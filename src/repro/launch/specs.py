@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+`input_specs(cfg, cell)` returns (batch_specs, cache_specs|None): weak-type-
+correct, shardable, zero allocation.  Shapes follow the assignment's cells:
+
+  train_4k     -> train_step inputs  (microbatched per `microbatch_plan`)
+  prefill_32k  -> prefill inputs + an empty cache to fill
+  decode_32k   -> serve_step: ONE new token against a seq_len KV cache
+  long_500k    -> serve_step at 524288 context (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell, microbatch_plan
+from repro.models.model import init_cache
+
+PyTree = Any
+
+_I32 = jnp.int32
+
+
+def _token_like(cfg: ModelConfig, b: int, s: int, with_targets: bool) -> dict:
+    d = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        specs = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), d),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+        }
+        if with_targets:
+            specs["targets"] = jax.ShapeDtypeStruct((b, s), _I32)
+            specs["target_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+        return specs
+    if cfg.family == "vlm":
+        sv = s // 4
+        st = s - sv
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, st), _I32),
+            "patch_embeds": jax.ShapeDtypeStruct((b, sv, cfg.d_model), d),
+            "positions": jax.ShapeDtypeStruct((b, 3, s), _I32),
+        }
+        if with_targets:
+            specs["targets"] = jax.ShapeDtypeStruct((b, st), _I32)
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), _I32)}
+    if with_targets:
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), _I32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int) -> PyTree:
+    """Cache ShapeDtypeStructs without allocating (eval_shape over init)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                data_shards: int = 16) -> tuple[PyTree, PyTree | None, int]:
+    """Returns (batch_specs, cache_specs | None, accum)."""
+    if cell.kind == "train":
+        accum, per_step = microbatch_plan(cfg, cell, data_shards)
+        specs = _token_like(cfg, per_step, cell.seq_len, with_targets=True)
+        if accum > 1:
+            specs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((accum,) + s.shape, s.dtype),
+                specs,
+            )
+        return specs, None, accum
+    if cell.kind == "prefill":
+        specs = _token_like(cfg, cell.global_batch, cell.seq_len,
+                            with_targets=False)
+        specs["prompt_lens"] = jax.ShapeDtypeStruct((cell.global_batch,), _I32)
+        cache = cache_specs(cfg, cell.global_batch, cell.seq_len)
+        return specs, cache, 1
+    # decode: one new token against a cache of length seq_len
+    b = cell.global_batch
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), _I32)}
+    if cfg.m_rope:
+        specs["positions"] = jax.ShapeDtypeStruct((b, 3, 1), _I32)
+    cache = cache_specs(cfg, b, cell.seq_len)
+    return specs, cache, 1

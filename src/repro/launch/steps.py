@@ -1,0 +1,226 @@
+"""Builds the jit-able step functions + sharding trees for each shape cell.
+
+This is the bridge between the model code (logical axis annotations) and a
+concrete mesh: it picks the rule table (memory-napkin-math driven), resolves
+param/opt/cache/batch shardings, and returns everything `dryrun.py`,
+`train.py` and `serve.py` need to lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.launch.specs import input_specs
+from repro.models import (
+    cache_logical_axes,
+    decode_step,
+    forward_train,
+    param_logical_axes,
+    param_shapes,
+    prefill,
+)
+from repro.training.optim import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.training.train_loop import make_train_step
+
+PyTree = Any
+
+HBM_PER_CHIP = 16e9          # v5e
+# Switch decode to 2D weight-stationary sharding (and prefill to FSDP) when
+# the TP-only weight share exceeds this: 6 GB leaves room for deepseek-67b's
+# 95-layer KV cache next to its weights (§Perf iteration 6b).
+WEIGHT_FSDP_THRESHOLD = 6e9
+
+
+def param_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * jnp.dtype(cfg.dtype).itemsize
+
+
+def choose_rules(cfg: ModelConfig, cell: ShapeCell, mesh) -> dict:
+    """Pick the logical->mesh rule table for this cell.
+
+    Training always runs FSDP (ZeRO-3-style weight sharding over data).
+    Inference keeps weights TP-resident unless the per-chip TP share alone
+    blows the HBM budget (command-r-plus-104b: 208 GB / 16 = 13 GB -> FSDP).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    if cell.kind == "train":
+        # Universal SP + unconstrained FFN intermediates measured best on
+        # every arch family — including indivisible-head archs, where
+        # dropping SP was tried and REFUTED (EXPERIMENTS.md §Perf iter 4:
+        # it idles the model axis or regresses the dW strategy).
+        return shd.train_rules(multi_pod=multi_pod, fsdp=True)
+    model_shards = mesh.shape["model"]
+    need_fsdp = param_bytes(cfg) / model_shards > WEIGHT_FSDP_THRESHOLD
+    rules = shd.serve_rules(multi_pod=multi_pod,
+                            long_context=(cell.seq_len >= 262_144))
+    if need_fsdp and cell.kind == "decode":
+        # 2D weight-STATIONARY decode (§Perf iteration 5).  Naive FSDP
+        # re-gathers every weight per decoded token (~param_bytes of wire per
+        # step).  Instead: replicate the tiny decode activations (frees the
+        # data axis), shard weights 2D over (data x model) and contract
+        # in-place — per-layer output all-reduces are activation-sized
+        # (MBs), a ~24x collective reduction for command-r-plus-104b.
+        data = ("pod", "data") if multi_pod else "data"
+        rules["fsdp"] = data
+        rules["batch"] = None
+        rules["act_kv_seq"] = (data, "model") if not multi_pod else (
+            "pod", "data", "model")
+        if multi_pod:
+            rules["act_kv_seq"] = ("pod", "data", "model")
+    elif need_fsdp:
+        rules["fsdp"] = ("pod", "data") if multi_pod else "data"
+    return rules
+
+
+def _batch_logical(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Logical axes for each batch-spec leaf."""
+    lead = ("scan",) if cell.kind == "train" else ()  # accum axis unsharded
+
+    def t(*ax):
+        return lead + ax if cell.kind == "train" else ax
+
+    # seq dims of token/target leaves share the residual stream's "seq"
+    # sharding (SP): keeps cross-entropy's take_along_axis aligned with the
+    # seq-sharded logits instead of provoking a full logits all-gather.
+    common: dict[str, tuple] = {}
+    if cfg.family == "audio":
+        common = {"frames": t("batch", "seq", None), "mask": t("batch", "seq"),
+                  "targets": t("batch", "seq"),
+                  "target_mask": t("batch", "seq")}
+    elif cfg.family == "vlm":
+        common = {"tokens": t("batch", None),
+                  "patch_embeds": t("batch", None, None),
+                  "positions": t("batch", None, None),
+                  "targets": t("batch", None)}
+    else:
+        common = {"tokens": t("batch", "seq"), "targets": t("batch", "seq")}
+    common["prompt_lens"] = ("batch",)
+    return common
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable                 # jit-able python callable
+    args: tuple                  # ShapeDtypeStruct pytrees, in order
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    rules: dict
+    accum: int
+    kind: str
+
+
+def build_step(cfg: ModelConfig, cell: ShapeCell, mesh) -> BuiltStep:
+    rules = choose_rules(cfg, cell, mesh)
+    data_shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    batch_specs, cache_sp, accum = input_specs(cfg, cell, data_shards)
+
+    p_shapes = param_shapes(cfg)
+    p_axes = param_logical_axes(cfg)
+    p_shard = shd.tree_shardings(p_axes, p_shapes, rules, mesh)
+
+    blog = _batch_logical(cfg, cell)
+    b_shard = {
+        k: shd.tree_shardings(blog[k], v, rules, mesh)
+        for k, v in batch_specs.items()
+    }
+
+    if cell.kind == "train":
+        ocfg = AdamWConfig()
+        opt_specs = jax.eval_shape(init_adamw, p_shapes)
+        # ZeRO-1 comes for free here: fsdp rules already shard states.
+        o_axes = AdamWState(
+            step=(),
+            m=p_axes,
+            v=p_axes,
+        )
+        o_shard = AdamWState(
+            step=jax.sharding.NamedSharding(mesh, shd.P()),
+            m=shd.tree_shardings(p_axes, opt_specs.m, rules, mesh),
+            v=shd.tree_shardings(p_axes, opt_specs.v, rules, mesh),
+        )
+        raw_step = make_train_step(cfg, ocfg, accum=accum, remat=True)
+
+        def fn(params, opt_state, batch):
+            with shd.axis_rules(rules, mesh):
+                new_p, new_o, _, metrics = raw_step(params, opt_state, {}, batch)
+            return new_p, new_o, metrics["loss"]
+
+        return BuiltStep(
+            fn=fn,
+            args=(p_shapes, opt_specs, batch_specs),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard,
+                           jax.sharding.NamedSharding(mesh, shd.P())),
+            donate_argnums=(0, 1),
+            rules=rules, accum=accum, kind="train",
+        )
+
+    c_axes = cache_logical_axes(cfg)
+    c_shard = shd.tree_shardings(c_axes, cache_sp, rules, mesh)
+
+    if cell.kind == "prefill":
+        def fn(params, batch, cache):
+            with shd.axis_rules(rules, mesh):
+                return prefill(cfg, params, batch, cache)
+
+        repl = jax.sharding.NamedSharding(mesh, shd.P())
+        logits_shard = jax.sharding.NamedSharding(
+            mesh, shd.filter_spec_for_shape(
+                shd.P(rules.get("batch"), rules.get("vocab")),
+                (cell.global_batch, cfg.vocab_size), mesh))
+        return BuiltStep(
+            fn=fn,
+            args=(p_shapes, batch_specs, cache_sp),
+            in_shardings=(p_shard, b_shard, c_shard),
+            out_shardings=(logits_shard, c_shard),
+            donate_argnums=(2,),
+            rules=rules, accum=1, kind="prefill",
+        )
+
+    # decode: serve_step(params, cache, tokens) -> (logits, cache)
+    def fn(params, cache, tokens, positions=None):
+        with shd.axis_rules(rules, mesh):
+            return decode_step(cfg, params, cache, tokens, positions)
+
+    b = cell.global_batch
+    tok_shard = jax.sharding.NamedSharding(
+        mesh, shd.filter_spec_for_shape(
+            shd.P(rules.get("batch"), None), (b, 1), mesh))
+    logits_shard = jax.sharding.NamedSharding(
+        mesh, shd.filter_spec_for_shape(
+            shd.P(rules.get("batch"), None, rules.get("vocab")),
+            (b, 1, cfg.vocab_size), mesh))
+    args = [p_shapes, cache_sp, batch_specs["tokens"]]
+    in_sh = [p_shard, c_shard, tok_shard]
+    if "positions" in batch_specs:
+        args.append(batch_specs["positions"])
+        in_sh.append(jax.sharding.NamedSharding(
+            mesh, shd.filter_spec_for_shape(
+                shd.P(rules.get("batch"), None, None), (b, 3, 1), mesh)))
+    return BuiltStep(
+        fn=fn,
+        args=tuple(args),
+        in_shardings=tuple(in_sh),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+        rules=rules, accum=1, kind="decode",
+    )
+
+
+def lower_step(built: BuiltStep, mesh):
+    """jit + lower under the mesh.  Returns the Lowered object."""
+    jitted = jax.jit(
+        built.fn,
+        in_shardings=built.in_shardings,
+        out_shardings=built.out_shardings,
+        donate_argnums=built.donate_argnums,
+    )
+    with mesh:
+        return jitted.lower(*built.args)

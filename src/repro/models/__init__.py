@@ -1,0 +1,23 @@
+from repro.models.model import (
+    cache_logical_axes,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    lm_logits,
+    param_logical_axes,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "cache_logical_axes",
+    "decode_step",
+    "forward_train",
+    "init_cache",
+    "init_params",
+    "lm_logits",
+    "param_logical_axes",
+    "param_shapes",
+    "prefill",
+]

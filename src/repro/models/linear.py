@@ -1,0 +1,68 @@
+"""The FC execution-path hook — where PAPI's scheduling decision lands.
+
+Model code routes every FC projection (QKV, out-proj, FFN — the paper's "FC
+kernels") through `papi_linear`.  A context-local variant selects the
+execution path:
+
+  "pu"  (default) — XLA dot_general onto the MXU: the compute-bound path.
+  "pim"           — the weight-streaming `fc_gemv` Pallas kernel: the
+                    memory-bound path (FC-PIM analogue).
+
+The serving engine sets the variant per decode iteration from
+`core.scheduler.PapiScheduler`; both paths are numerically interchangeable
+(tested) so flipping is free.  Outside a `fc_variant(...)` context the hook
+is the plain einsum — training and the dry-run lower the XLA path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+def current_fc_variant() -> str:
+    return getattr(_state, "variant", "pu")
+
+
+@contextlib.contextmanager
+def fc_variant(variant: str, interpret: bool | None = None):
+    assert variant in ("pu", "pim"), variant
+    prev = current_fc_variant()
+    prev_i = getattr(_state, "interpret", None)
+    _state.variant = variant
+    _state.interpret = interpret
+    try:
+        yield
+    finally:
+        _state.variant = prev
+        _state.interpret = prev_i
+
+
+def _block(dim: int, target: int = 512) -> int:
+    """Largest divisor of dim that is <= target (Pallas block size)."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def papi_linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [..., K] @ w: [K, N] through the scheduled FC path."""
+    if current_fc_variant() == "pim":
+        from repro.kernels.fc_gemv import fc_gemv
+        lead = x.shape[:-1]
+        k, n = w.shape
+        m = 1
+        for d in lead:
+            m *= d
+        out = fc_gemv(
+            x.reshape(m, k), w,
+            block_k=_block(k), block_n=_block(n),
+            interpret=getattr(_state, "interpret", None),
+        )
+        return out.reshape(*lead, n)
+    return jnp.einsum("...k,kn->...n", x, w)

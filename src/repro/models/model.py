@@ -1,0 +1,623 @@
+"""Model definition: one parameterized decoder/encoder covering all assigned
+families (dense / moe / ssm / hybrid / vlm / audio).
+
+Parameters are described once by `model_spec(cfg)` (shape + logical sharding
+axes + init law per leaf); `init_params` and `param_logical_axes` both derive
+from it, so the two can never drift.  Layer parameters are stacked on a
+leading `num_layers` axis and consumed by `jax.lax.scan` — this keeps the
+lowered HLO size O(1) in depth (deepseek-67b has 95 layers) and is what the
+multi-pod dry-run compiles.
+
+Entry points:
+  init_params(cfg, key)                 -> params pytree
+  param_logical_axes(cfg)               -> matching pytree of logical axis tuples
+  init_cache(cfg, batch, capacity)      -> decode cache pytree
+  forward_train(cfg, params, batch)     -> (loss, metrics)
+  prefill(cfg, params, batch, cache)    -> (last_logits, cache)
+  decode_step(cfg, params, cache, toks) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+PyTree = Any
+
+
+# ===========================================================================
+# Parameter specs
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"      # normal | zeros | ones | a_log | dt_bias
+    std: float = 0.02
+
+
+def _attn_spec(cfg: ModelConfig, residual_std: float) -> dict[str, PSpec]:
+    d, nh, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    std = d ** -0.5
+    p = {
+        "w_q": PSpec((d, nh, hd), ("fsdp", "heads", None), std=std),
+        "w_k": PSpec((d, nkv, hd), ("fsdp", "kv_heads", None), std=std),
+        "w_v": PSpec((d, nkv, hd), ("fsdp", "kv_heads", None), std=std),
+        "w_o": PSpec((nh, hd, d), ("heads", None, "fsdp"), std=residual_std),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = PSpec((nh, hd), ("heads", None), init="zeros")
+        p["b_k"] = PSpec((nkv, hd), ("kv_heads", None), init="zeros")
+        p["b_v"] = PSpec((nkv, hd), ("kv_heads", None), init="zeros")
+    return p
+
+
+def _mlp_spec(cfg: ModelConfig, residual_std: float) -> dict[str, PSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    std = d ** -0.5
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": PSpec((d, f), ("fsdp", "ffn"), std=std),
+            "w_up": PSpec((d, f), ("fsdp", "ffn"), std=std),
+            "w_down": PSpec((f, d), ("ffn", "fsdp"), std=residual_std),
+        }
+    return {
+        "w_in": PSpec((d, f), ("fsdp", "ffn"), std=std),
+        "b_in": PSpec((f,), ("ffn",), init="zeros"),
+        "w_out": PSpec((f, d), ("ffn", "fsdp"), std=residual_std),
+        "b_out": PSpec((d,), (None,), init="zeros"),
+    }
+
+
+def _moe_spec(cfg: ModelConfig, residual_std: float) -> dict[str, PSpec]:
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.moe.d_ff, cfg.moe.num_experts
+    std = d ** -0.5
+    return {
+        "w_router": PSpec((d, e), (None, None), std=std),
+        "w_gate": PSpec((e, d, f), ("experts", "fsdp", None), std=std),
+        "w_up": PSpec((e, d, f), ("experts", "fsdp", None), std=std),
+        "w_down": PSpec((e, f, d), ("experts", None, "fsdp"), std=residual_std),
+    }
+
+
+def _ssm_spec(cfg: ModelConfig, residual_std: float) -> dict[str, PSpec]:
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, n, k = s.d_inner(d), s.n_heads(d), s.d_state, s.conv_kernel
+    std = d ** -0.5
+    return {
+        "w_z": PSpec((d, di), ("fsdp", "ssm_heads"), std=std),
+        "w_x": PSpec((d, di), ("fsdp", "ssm_heads"), std=std),
+        "w_B": PSpec((d, n), ("fsdp", None), std=std),
+        "w_C": PSpec((d, n), ("fsdp", None), std=std),
+        "w_dt": PSpec((d, nh), ("fsdp", "ssm_heads"), std=std),
+        "conv_x": PSpec((k, di), (None, "ssm_heads"), std=(1 / math.sqrt(k))),
+        "conv_B": PSpec((k, n), (None, None), std=(1 / math.sqrt(k))),
+        "conv_C": PSpec((k, n), (None, None), std=(1 / math.sqrt(k))),
+        "A_log": PSpec((nh,), ("ssm_heads",), init="a_log"),
+        "D": PSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": PSpec((nh,), ("ssm_heads",), init="dt_bias"),
+        "norm_w": PSpec((di,), ("ssm_heads",), init="ones"),
+        "w_out": PSpec((di, d), ("ssm_heads", "fsdp"), std=residual_std),
+    }
+
+
+def _layer_spec(cfg: ModelConfig, residual_std: float) -> dict[str, Any]:
+    """Spec of ONE layer (unstacked)."""
+    d = cfg.d_model
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "norm": PSpec((d,), (None,), init="ones"),
+            "ssm": _ssm_spec(cfg, residual_std),
+        }
+    block = {
+        "norm1": PSpec((d,), (None,), init="ones"),
+        "attn": _attn_spec(cfg, residual_std),
+        "norm2": PSpec((d,), (None,), init="ones"),
+    }
+    if cfg.family == "moe":
+        block["moe"] = _moe_spec(cfg, residual_std)
+    else:
+        block["mlp"] = _mlp_spec(cfg, residual_std)
+    return block
+
+
+def model_spec(cfg: ModelConfig) -> dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    n_res = 2 * cfg.num_layers
+    residual_std = (d ** -0.5) / math.sqrt(max(n_res, 1))
+
+    spec: dict[str, Any] = {
+        "embed": {"w": PSpec((v, d), ("embed_vocab", None), std=0.02)},
+        "final_norm": {"w": PSpec((d,), (None,), init="ones")},
+    }
+
+    layer = _layer_spec(cfg, residual_std)
+    spec["layers"] = jax.tree.map(
+        lambda ps: PSpec(
+            (cfg.num_layers,) + ps.shape, ("scan",) + ps.logical, ps.init, ps.std
+        ),
+        layer,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+    if cfg.family == "hybrid":
+        # One weight-tied attention+MLP block shared across applications.
+        spec["shared"] = {
+            "norm1": PSpec((d,), (None,), init="ones"),
+            "attn": _attn_spec(cfg, residual_std),
+            "norm2": PSpec((d,), (None,), init="ones"),
+            "mlp": _mlp_spec(cfg, residual_std),
+        }
+    if cfg.family == "audio":
+        spec["mask_embed"] = {"w": PSpec((d,), (None,), std=0.02)}
+    if cfg.decoder and not cfg.tie_embeddings:
+        spec["lm_head"] = {"w": PSpec((d, v), ("fsdp", "embed_vocab"), std=d ** -0.5)}
+    return spec
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    spec = model_spec(cfg)
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=_is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+
+    def make(ps: PSpec, k: jax.Array) -> jax.Array:
+        if ps.init == "zeros":
+            return jnp.zeros(ps.shape, dtype)
+        if ps.init == "ones":
+            return jnp.ones(ps.shape, dtype)
+        if ps.init == "a_log":
+            assert cfg.ssm is not None
+            u = jax.random.uniform(k, ps.shape, jnp.float32,
+                                   cfg.ssm.a_min, cfg.ssm.a_max)
+            return jnp.log(u)  # keep f32: A_log is a recurrence-critical param
+        if ps.init == "dt_bias":
+            # softplus^{-1}(dt) for dt ~ logU[1e-3, 1e-1]
+            u = jax.random.uniform(k, ps.shape, jnp.float32)
+            dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+            return dt + jnp.log(-jnp.expm1(-dt))
+        x = jax.random.truncated_normal(k, -3.0, 3.0, ps.shape, jnp.float32)
+        return (x * ps.std).astype(dtype)
+
+    params = [make(ps, k) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, params)
+
+
+def param_logical_axes(cfg: ModelConfig) -> PyTree:
+    return jax.tree.map(lambda ps: ps.logical, model_spec(cfg), is_leaf=_is_pspec)
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def to_sds(ps: PSpec):
+        dt = jnp.float32 if ps.init in ("a_log", "dt_bias") else dtype
+        return jax.ShapeDtypeStruct(ps.shape, dt)
+
+    return jax.tree.map(to_sds, model_spec(cfg), is_leaf=_is_pspec)
+
+
+# ===========================================================================
+# KV / state caches
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> PyTree:
+    """Decode cache.  `capacity` = max sequence length held."""
+    dtype = jnp.dtype(cfg.dtype)
+    cache: dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        cache["k"] = jnp.zeros((cfg.num_layers, batch, capacity, nkv, hd), dtype)
+        cache["v"] = jnp.zeros((cfg.num_layers, batch, capacity, nkv, hd), dtype)
+    elif cfg.family == "ssm":
+        assert cfg.ssm is not None
+        st = S.init_state(batch, cfg.d_model, cfg.ssm, dtype)
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), st
+        )
+    elif cfg.family == "hybrid":
+        assert cfg.ssm is not None and cfg.hybrid is not None
+        st = S.init_state(batch, cfg.d_model, cfg.ssm, dtype)
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), st
+        )
+        napps = cfg.num_attention_applications()
+        cache["k"] = jnp.zeros((napps, batch, capacity, nkv, hd), dtype)
+        cache["v"] = jnp.zeros((napps, batch, capacity, nkv, hd), dtype)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig) -> PyTree:
+    """Logical axes for the cache pytree (mirrors init_cache)."""
+    axes: dict[str, Any] = {"pos": (None,)}
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        axes["k"] = ("scan", "batch", "act_kv_seq", "kv_heads", None)
+        axes["v"] = ("scan", "batch", "act_kv_seq", "kv_heads", None)
+    if cfg.family in ("ssm", "hybrid"):
+        axes["ssm"] = S.SSMState(
+            conv_x=("scan", "batch", None, "ssm_heads"),
+            conv_B=("scan", "batch", None, None),
+            conv_C=("scan", "batch", None, None),
+            ssm=("scan", "batch", "ssm_heads", None, None),
+        )
+    return axes
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+
+def _write_kv(k_cache, v_cache, k_new, v_new, pos):
+    """Write [b, t, nkv, hd] at per-request positions pos [b]."""
+    def upd(cache, new, p):
+        return jax.lax.dynamic_update_slice(cache, new, (p, 0, 0))
+    k_cache = jax.vmap(upd)(k_cache, k_new, pos)
+    v_cache = jax.vmap(upd)(v_cache, v_new, pos)
+    return k_cache, v_cache
+
+
+def _apply_positional(cfg: ModelConfig, q, k, positions):
+    if cfg.family == "audio":
+        return q, k  # hubert: conv positional frontend (stubbed) — no RoPE
+    if cfg.m_rope:
+        q = L.apply_m_rope(q, positions, cfg.rope_theta, tuple(cfg.m_rope_sections))
+        k = L.apply_m_rope(k, positions, cfg.rope_theta, tuple(cfg.m_rope_sections))
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: Mapping[str, Any],
+    h: jax.Array,
+    positions: jax.Array,
+    kv: tuple[jax.Array, jax.Array] | None,
+    pos: jax.Array | None,
+    mode: str,                      # train | prefill | decode
+):
+    """Pre-norm attention sub-block.  Returns (h, new_kv|None)."""
+    a_in = L.norm(h, p["norm1"], cfg.norm, cfg.norm_eps)
+    q, k, v = L.qkv_project(a_in, p["attn"], cfg.num_heads, cfg.num_kv_heads,
+                            cfg.resolved_head_dim)
+    q, k = _apply_positional(cfg, q, k, positions)
+    new_kv = None
+    if mode == "decode":
+        assert kv is not None and pos is not None
+        k_cache, v_cache = _write_kv(kv[0], kv[1], k, v, pos)
+        t = q.shape[1]
+        attn = L.decode_attention_xla(q, k_cache, v_cache,
+                                      cache_len=pos + t, q_offset=pos)
+        new_kv = (k_cache, v_cache)
+    else:
+        attn = L.flash_attention(q, k, v, causal=cfg.causal)
+        if kv is not None:  # prefill: persist the new KV
+            new_kv = _write_kv(kv[0], kv[1], k, v, jnp.zeros_like(pos))
+    h = h + L.out_project(attn, p["attn"])
+    h = shard(h, "batch", "seq", None)
+    return h, new_kv
+
+
+def mlp_block(cfg: ModelConfig, p: Mapping[str, Any], h: jax.Array):
+    """Pre-norm MLP / MoE sub-block.  Returns (h, aux_loss)."""
+    m_in = L.norm(h, p["norm2"], cfg.norm, cfg.norm_eps)
+    if cfg.family == "moe":
+        assert cfg.moe is not None
+        y, aux = M.moe_mlp(m_in, p["moe"], cfg.moe)
+    else:
+        mlp = L.swiglu_mlp if cfg.mlp == "swiglu" else L.gelu_mlp
+        y, aux = mlp(m_in, p["mlp"]), jnp.zeros((), jnp.float32)
+    h = h + y
+    h = shard(h, "batch", "seq", None)
+    return h, aux
+
+
+def ssm_block(cfg: ModelConfig, p: Mapping[str, Any], h: jax.Array,
+              state: S.SSMState | None, mode: str):
+    u = L.norm(h, p["norm"], cfg.norm, cfg.norm_eps)
+    assert cfg.ssm is not None
+    y, new_state = S.mamba2_block(u, p["ssm"], cfg.ssm, cfg.d_model,
+                                  state=state, decode=(mode == "decode"))
+    h = h + y
+    h = shard(h, "batch", "seq", None)
+    return h, new_state
+
+
+# ===========================================================================
+# Backbone
+# ===========================================================================
+
+def _transformer_backbone(cfg, params, h, positions, cache, mode, remat):
+    """Scan over stacked transformer layers (dense/moe/vlm/audio).
+
+    With a cache, the FULL stacked KV tensors ride in the scan *carry* and
+    each layer dynamic-update-slices its own [1, ...] slab in place.  Passing
+    them as xs/ys instead would give the loop separate input and output
+    stacked buffers — 2x the KV bytes live (13 GB/device extra for
+    command-r-plus decode_32k; §Perf iteration 6).
+    """
+    use_cache = cache is not None
+    pos = cache["pos"] if use_cache else None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if use_cache:
+        def body(carry, lp):
+            h, aux, i, kfull, vfull = carry
+            kc = jax.lax.dynamic_index_in_dim(kfull, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vfull, i, 0, keepdims=False)
+            h, new_kv = attention_block(cfg, lp, h, positions, (kc, vc),
+                                        pos, mode)
+            kfull = jax.lax.dynamic_update_slice_in_dim(
+                kfull, new_kv[0][None], i, 0)
+            vfull = jax.lax.dynamic_update_slice_in_dim(
+                vfull, new_kv[1][None], i, 0)
+            h, aux_l = mlp_block(cfg, lp, h)
+            return (h, aux + aux_l, i + 1, kfull, vfull), None
+
+        (h, aux, _, kfull, vfull), _ = jax.lax.scan(
+            body,
+            (h, aux0, jnp.zeros((), jnp.int32), cache["k"], cache["v"]),
+            params["layers"],
+        )
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = kfull, vfull
+        return h, aux, new_cache
+
+    def body(carry, lp):
+        h, aux = carry
+        h, _ = attention_block(cfg, lp, h, positions, None, None, mode)
+        h, aux_l = mlp_block(cfg, lp, h)
+        return (h, aux + aux_l), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (h, aux), _ = jax.lax.scan(body, (h, aux0), params["layers"])
+    return h, aux, None
+
+
+def _ssm_backbone(cfg, params, h, cache, mode, remat):
+    use_cache = cache is not None
+
+    def body(carry, xs):
+        h = carry
+        if use_cache:
+            lp, st = xs
+            h, new_st = ssm_block(cfg, lp, h, st, mode)
+        else:
+            lp = xs
+            h, new_st = ssm_block(cfg, lp, h, None, mode)
+        return h, new_st
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    if use_cache:
+        h, sts = jax.lax.scan(body, h, (params["layers"], cache["ssm"]))
+        new_cache = dict(cache)
+        new_cache["ssm"] = sts
+    else:
+        h, sts = jax.lax.scan(body, h, params["layers"])
+        new_cache = None
+    return h, jnp.zeros((), jnp.float32), new_cache
+
+
+def _hybrid_backbone(cfg, params, h, positions, cache, mode, remat):
+    """zamba2: segments of `period` mamba blocks, shared attention between.
+
+    The shared attention block (weight-tied) is applied after backbone layer
+    i whenever i % period == period-1, i.e. `num_layers // period` times.
+    Static python structure — no lax.cond — so each application has a static
+    KV-cache index.
+    """
+    assert cfg.hybrid is not None
+    period = cfg.hybrid.period
+    napps = cfg.num_attention_applications()
+    use_cache = cache is not None
+    pos = cache["pos"] if use_cache else None
+    shared = params["shared"]
+
+    def seg_slice(tree, lo, hi):
+        return jax.tree.map(lambda x: x[lo:hi], tree)
+
+    def run_segment(h, lo, hi, cache_seg):
+        def body(carry, xs):
+            hh = carry
+            if use_cache:
+                lp, st = xs
+                hh, new_st = ssm_block(cfg, lp, hh, st, mode)
+            else:
+                lp = xs
+                hh, new_st = ssm_block(cfg, lp, hh, None, mode)
+            return hh, new_st
+
+        bd = body
+        if remat:
+            bd = jax.checkpoint(bd, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (seg_slice(params["layers"], lo, hi),)
+        if use_cache:
+            xs = xs + (cache_seg,)
+            h, sts = jax.lax.scan(bd, h, xs if len(xs) > 1 else xs[0])
+            return h, sts
+        h, sts = jax.lax.scan(bd, h, xs[0])
+        return h, None
+
+    def shared_app(h, kv):
+        """One shared attention+MLP application (weight-tied block).
+        (Wrapping this in jax.checkpoint was tried and REFUTED — zamba2
+        train residency stayed ~34 GB and compile time grew 8x; the
+        residency lives in the SSD chunk tensors, not these blocks.)"""
+        h, new_kv = attention_block(cfg, shared, h, positions, kv, pos, mode)
+        h, _ = mlp_block(cfg, shared, h)
+        return h, new_kv
+
+    new_ssm_parts = []
+    new_k, new_v = (cache["k"], cache["v"]) if use_cache else (None, None)
+    lo = 0
+    for app in range(napps):
+        hi = lo + period
+        cache_seg = (jax.tree.map(lambda x: x[lo:hi], cache["ssm"])
+                     if use_cache else None)
+        h, sts = run_segment(h, lo, hi, cache_seg)
+        if use_cache:
+            new_ssm_parts.append(sts)
+        # shared attention + MLP application #app
+        kv = ((new_k[app], new_v[app]) if use_cache else None)
+        h, new_kv = shared_app(h, kv)
+        if use_cache and new_kv is not None:
+            new_k = new_k.at[app].set(new_kv[0])
+            new_v = new_v.at[app].set(new_kv[1])
+        lo = hi
+    if lo < cfg.num_layers:  # remainder backbone layers
+        cache_seg = (jax.tree.map(lambda x: x[lo:], cache["ssm"])
+                     if use_cache else None)
+        h, sts = run_segment(h, lo, cfg.num_layers, cache_seg)
+        if use_cache:
+            new_ssm_parts.append(sts)
+
+    new_cache = None
+    if use_cache:
+        new_cache = dict(cache)
+        new_cache["ssm"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm_parts
+        )
+        new_cache["k"], new_cache["v"] = new_k, new_v
+    return h, jnp.zeros((), jnp.float32), new_cache
+
+
+def backbone(cfg, params, h, positions, cache, mode, remat=False):
+    h = shard(h, "batch", "seq", None)
+    if cfg.family == "ssm":
+        return _ssm_backbone(cfg, params, h, cache, mode, remat)
+    if cfg.family == "hybrid":
+        return _hybrid_backbone(cfg, params, h, positions, cache, mode, remat)
+    return _transformer_backbone(cfg, params, h, positions, cache, mode, remat)
+
+
+# ===========================================================================
+# Heads / embedding
+# ===========================================================================
+
+def embed_tokens(cfg, params, tokens):
+    w = params["embed"]["w"]
+    h = jnp.take(w, tokens, axis=0)
+    return h
+
+
+def embed_inputs(cfg, params, batch: Mapping[str, jax.Array]):
+    """Family-dependent input embedding.  Returns (h [b,s,d], positions)."""
+    if cfg.family == "audio":
+        frames = batch["frames"]
+        if "mask" in batch:
+            m = batch["mask"][..., None].astype(frames.dtype)
+            frames = frames * (1 - m) + params["mask_embed"]["w"] * m
+        pos = jnp.arange(frames.shape[1])[None, :]
+        return frames, pos
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        text = embed_tokens(cfg, params, batch["tokens"])
+        h = jnp.concatenate([batch["patch_embeds"].astype(text.dtype), text], axis=1)
+        positions = batch["positions"]        # [b, 3, s] M-RoPE triples
+        return h, positions
+    tokens = batch["tokens"]
+    h = embed_tokens(cfg, params, tokens)
+    if "positions" in batch:
+        return h, batch["positions"]
+    return h, jnp.arange(tokens.shape[1])[None, :]
+
+
+def lm_logits(cfg, params, h):
+    h = L.norm(h, params["final_norm"]["w"], cfg.norm, cfg.norm_eps)
+    if cfg.decoder and not cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"]["w"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"])
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits, targets, mask):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / denom
+
+
+# ===========================================================================
+# Steps
+# ===========================================================================
+
+def forward_train(cfg, params, batch, *, remat=True):
+    """One unjitted training forward: returns (loss, metrics)."""
+    h, positions = embed_inputs(cfg, params, batch)
+    h, aux, _ = backbone(cfg, params, h, positions, None, "train", remat=remat)
+    logits = lm_logits(cfg, params, h)
+    mask = batch.get("target_mask")
+    if mask is None:
+        mask = jnp.ones(batch["targets"].shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    if cfg.family == "vlm":
+        # labels only exist for the text tail; pad the vision prefix out.
+        pad = logits.shape[1] - batch["targets"].shape[1]
+        tgt = jnp.pad(batch["targets"], ((0, 0), (pad, 0)))
+        mask = jnp.pad(mask, ((0, 0), (pad, 0)))
+    else:
+        tgt = batch["targets"]
+    ce = cross_entropy(logits, tgt, mask)
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    loss = ce + aux_w * aux / max(cfg.num_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg, params, batch, cache):
+    """Process the prompt, fill the cache, return last-position logits."""
+    h, positions = embed_inputs(cfg, params, batch)
+    h, _, cache = backbone(cfg, params, h, positions, cache, "prefill")
+    prompt_lens = batch.get("prompt_lens")
+    if prompt_lens is None:
+        prompt_lens = jnp.full((h.shape[0],), h.shape[1], jnp.int32)
+    cache["pos"] = prompt_lens.astype(jnp.int32)
+    idx = jnp.clip(prompt_lens - 1, 0, h.shape[1] - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = lm_logits(cfg, params, h_last)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg, params, cache, tokens, positions=None):
+    """tokens [b, t] -> (logits [b, t, V], new cache).  t = TLP (1 for the
+    dry-run serve_step; >1 verifies a speculative window)."""
+    b, t = tokens.shape[0], tokens.shape[1]
+    pos = cache["pos"]
+    if positions is None:
+        positions = pos[:, None] + jnp.arange(t)[None, :]
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, t))
+    batch = {"tokens": tokens, "positions": positions}
+    h, positions = embed_inputs(cfg, params, batch)
+    h, _, cache = backbone(cfg, params, h, positions, cache, "decode")
+    logits = lm_logits(cfg, params, h)
+    cache["pos"] = pos + t
+    return logits, cache

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based one-hot dispatch.
+
+GShard/Switch-style static-shape dispatch so the layer lowers cleanly in the
+multi-pod dry-run (no dynamic shapes): tokens are routed into a
+[experts, capacity] buffer via einsum with a dispatch one-hot; overflow
+tokens are dropped (their combine weight is zero) — standard capacity-factor
+semantics.
+
+Expert weights are stacked [E, ...] and sharded over the `model` mesh axis
+(expert parallelism).  The PAPI connection (§6.5 of the paper): the per-expert
+parallelism is RLP*TLP*top_k/E, so experts stay memory-bound far longer than
+a dense FFN — `core.scheduler` uses exactly this corrected parallelism for
+MoE archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import shard
+
+Params = Mapping[str, jax.Array]
+
+
+# Tokens are dispatched within fixed-size groups: the one-hot dispatch tensor
+# is [g, GROUP, E, C] — quadratic in group size — so grouping caps its memory
+# at ~40MB/group regardless of global batch (GShard's "G" dimension).
+GROUP_SIZE = 1024
+
+
+def expert_capacity(num_tokens: int, cfg: MoEConfig) -> int:
+    if num_tokens <= 2048:
+        # Decode-scale groups: full capacity => token drops are impossible
+        # (serving must be lossless; PAPI does not approximate).
+        return num_tokens
+    cap = math.ceil(num_tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    # Keep lane-friendly: round up to a multiple of 8 (min 8).
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def router(x: jax.Array, w_router: jax.Array, cfg: MoEConfig):
+    """x: [tokens, d] -> (top-k expert ids [tokens, k], weights [tokens, k],
+    full router probs [tokens, E] for the aux loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+    # OLMoE/granite-moe normalize the top-k weights to sum to one.
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    return top_e, top_w, probs
+
+
+def load_balancing_loss(probs: jax.Array, top_e: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-transformer aux loss: E * sum_e f_e * P_e."""
+    tokens = probs.shape[0]
+    occupancy = jax.nn.one_hot(top_e, num_experts, dtype=jnp.float32)  # [t, k, E]
+    f = jnp.sum(occupancy, axis=(0, 1)) / (tokens * top_e.shape[1])
+    p = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def _dispatch_tensors(top_e: jax.Array, top_w: jax.Array, cfg: MoEConfig,
+                      capacity: int):
+    """Build dispatch one-hot [t, E, C] and combine weights [t, E, C]."""
+    t, k = top_e.shape
+    e_onehot = jax.nn.one_hot(top_e, cfg.num_experts, dtype=jnp.float32)  # [t,k,E]
+    # Position of each (token, k) assignment within its expert's buffer:
+    # cumulative count over the flattened (k-major, token-minor) order.
+    flat = e_onehot.transpose(1, 0, 2).reshape(t * k, cfg.num_experts)    # [k*t, E]
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat                       # [k*t, E]
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(k, t).T          # [t, k]
+    keep = (pos < capacity).astype(jnp.float32)
+    pos_onehot = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                                dtype=jnp.float32)                        # [t,k,C]
+    dispatch = jnp.einsum("tke,tkc,tk->tec", e_onehot, pos_onehot, keep)
+    combine = jnp.einsum("tec,tke,tk->tec", dispatch, e_onehot, top_w)
+    return dispatch, combine
+
+
+def moe_mlp(x: jax.Array, p: Params, cfg: MoEConfig):
+    """x: [b, s, d] -> (y [b, s, d], aux_loss scalar).
+
+    p: w_router [d, E]; w_gate/w_up [E, d, f]; w_down [E, f, d].
+
+    Tokens are flattened and split into GROUP_SIZE groups (the group axis
+    aligns with the batch axis when s % GROUP_SIZE == 0, so it shards over
+    `data` alongside activations).
+    """
+    b, s, d = x.shape
+    tokens = b * s
+    gs = min(GROUP_SIZE, tokens)
+    assert tokens % gs == 0, f"{tokens} tokens not divisible by group {gs}"
+    g = tokens // gs
+    xt = x.reshape(g, gs, d)
+
+    top_e, top_w, probs = jax.vmap(lambda xg: router(xg, p["w_router"], cfg))(xt)
+    aux = jnp.mean(
+        jax.vmap(lambda pr, te: load_balancing_loss(pr, te, cfg.num_experts))(
+            probs, top_e
+        )
+    )
+    capacity = expert_capacity(gs, cfg)
+    dispatch, combine = jax.vmap(
+        lambda te, tw: _dispatch_tensors(te, tw, cfg, capacity)
+    )(top_e, top_w)                                       # [g, gs, E, C]
+
+    # [g, E, C, d] expert inputs; experts sharded over `model` (EP), group
+    # (≈ batch) over `data`.
+    xin = jnp.einsum("gtd,gtec->gecd", xt, dispatch.astype(x.dtype))
+    xin = shard(xin, "batch", "act_experts", None, None)
+    gate = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    yout = jnp.einsum("gecf,efd->gecd", act, p["w_down"])
+    yout = shard(yout, "batch", "act_experts", None, None)
+    y = jnp.einsum("gecd,gtec->gtd", yout, combine.astype(x.dtype))
+    return y.reshape(b, s, d), aux

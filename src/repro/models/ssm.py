@@ -1,0 +1,210 @@
+"""Mamba2 / SSD (state-space duality) block — pure-JAX chunked algorithm.
+
+Recurrence (per head h, head_dim p, state n):
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * (x_t outer B_t)      S: [p, n]
+    y_t = S_t @ C_t + D * x_t
+
+Training/prefill use the chunked SSD form (Mamba2 paper §6): intra-chunk
+contributions are dense matmuls (MXU-friendly), inter-chunk states compose
+through a log-depth associative scan.  Decode uses the O(1) recurrent step.
+
+TP: heads (and the head-major d_inner dim) shard over the `model` mesh axis;
+B/C are group-shared (n_groups=1) and replicate.
+"""
+from __future__ import annotations
+
+from typing import Mapping, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.distributed.sharding import shard
+
+Params = Mapping[str, jax.Array]
+
+
+class SSMState(NamedTuple):
+    conv_x: jax.Array   # [b, K-1, di]
+    conv_B: jax.Array   # [b, K-1, n]
+    conv_C: jax.Array   # [b, K-1, n]
+    ssm: jax.Array      # [b, nh, hp, n] (f32)
+
+
+def init_state(batch: int, d_model: int, s: SSMConfig, dtype) -> SSMState:
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    k = s.conv_kernel - 1
+    return SSMState(
+        conv_x=jnp.zeros((batch, k, di), dtype),
+        conv_B=jnp.zeros((batch, k, s.d_state), dtype),
+        conv_C=jnp.zeros((batch, k, s.d_state), dtype),
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv1d.  x: [b, l, c]; w: [K, c].
+
+    Returns (y [b, l, c], new_state [b, K-1, c]).  `state` carries the last
+    K-1 inputs from the previous call (decode); None => zero history (train).
+    """
+    k = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)            # [b, l+K-1, c]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :]
+    return y, new_state
+
+
+def _ssd_chunked(
+    x: jax.Array,    # [b, l, nh, hp]
+    dt: jax.Array,   # [b, l, nh] (post-softplus, f32)
+    A: jax.Array,    # [nh] (negative, f32)
+    B: jax.Array,    # [b, l, n]
+    C: jax.Array,    # [b, l, n]
+    chunk: int,
+    init_state: jax.Array | None = None,   # [b, nh, hp, n] f32
+):
+    """Chunked SSD.  Returns (y [b, l, nh, hp], final_state [b, nh, hp, n])."""
+    b, l, nh, hp = x.shape
+    n = B.shape[-1]
+    cs = min(chunk, l)
+    assert l % cs == 0, f"seq {l} not divisible by chunk {cs}"
+    nc = l // cs
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, cs, nh, hp)
+    dtc = dt.reshape(b, nc, cs, nh).astype(f32)
+    Bc = B.reshape(b, nc, cs, n)
+    Cc = C.reshape(b, nc, cs, n)
+
+    lt = dtc * A[None, None, None, :]                     # log-decay per step
+    cum = jnp.cumsum(lt, axis=2)                          # [b, nc, cs, nh]
+
+    # --- intra-chunk (dense, MXU-friendly) --------------------------------
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(f32), Bc.astype(f32))
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b, nc, i, j, nh]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    dtx = (dtc[..., None] * xc.astype(f32))               # [b, nc, cs, nh, hp]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, L, dtx)
+
+    # --- chunk summary states ---------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # [b, nc, cs, nh]
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, Bc.astype(f32), dtx)
+    G_chunk = jnp.exp(cum[:, :, -1, :])                   # [b, nc, nh]
+
+    # --- inter-chunk recurrence: associative scan over transforms ----------
+    #   state_after_c = G_c * state_before_c + S_c
+    def combine(a, bb):
+        g1, s1 = a
+        g2, s2 = bb
+        return g1 * g2, g2[..., None, None] * s1 + s2
+
+    G_in, S_in = G_chunk, S_chunk
+    if init_state is not None:
+        # Prepend the incoming state as a pseudo-chunk with unit decay.
+        G_in = jnp.concatenate([jnp.ones((b, 1, nh), f32), G_chunk], axis=1)
+        S_in = jnp.concatenate([init_state[:, None].astype(f32), S_chunk], axis=1)
+    G_acc, S_acc = jax.lax.associative_scan(combine, (G_in, S_in), axis=1)
+    if init_state is not None:
+        S_before = S_acc[:, :-1]                          # state entering chunk c
+        final_state = S_acc[:, -1]
+    else:
+        S_before = jnp.concatenate(
+            [jnp.zeros((b, 1, nh, hp, n), f32), S_acc[:, :-1]], axis=1
+        )
+        final_state = S_acc[:, -1]
+
+    # --- inter-chunk contribution ------------------------------------------
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", Cc.astype(f32), jnp.exp(cum), S_before
+    )
+    y = (y_intra + y_inter).reshape(b, l, nh, hp)
+    return y.astype(x.dtype), final_state
+
+
+def _ssd_recurrent(
+    x: jax.Array,    # [b, t, nh, hp]  (t small: decode / speculative verify)
+    dt: jax.Array,   # [b, t, nh] f32
+    A: jax.Array,    # [nh] f32
+    B: jax.Array,    # [b, t, n]
+    C: jax.Array,    # [b, t, n]
+    state: jax.Array,  # [b, nh, hp, n] f32
+):
+    f32 = jnp.float32
+
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp                             # [b,nh,hp],[b,nh],[b,n],[b,n]
+        g = jnp.exp(dtt * A[None, :])                     # [b, nh]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt.astype(f32), Bt.astype(f32))
+        s = g[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, Ct.astype(f32))
+        return s, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0).astype(f32),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def mamba2_block(
+    u: jax.Array,              # [b, l, d] (already normed)
+    p: Params,
+    s: SSMConfig,
+    d_model: int,
+    state: SSMState | None = None,
+    decode: bool = False,
+):
+    """Full Mamba2 block.  Returns (out [b, l, d], new_state | None)."""
+    b, l, d = u.shape
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    hp = s.head_dim
+
+    z = jnp.einsum("bld,di->bli", u, p["w_z"])
+    x = jnp.einsum("bld,di->bli", u, p["w_x"])
+    Bp = jnp.einsum("bld,dn->bln", u, p["w_B"])
+    Cp = jnp.einsum("bld,dn->bln", u, p["w_C"])
+    dt = jnp.einsum("bld,dh->blh", u, p["w_dt"])
+    x = shard(x, "batch", None, "ssm_heads")
+    z = shard(z, "batch", None, "ssm_heads")
+
+    cx, new_cx = _causal_conv(x, p["conv_x"], state.conv_x if state else None)
+    cB, new_cB = _causal_conv(Bp, p["conv_B"], state.conv_B if state else None)
+    cC, new_cC = _causal_conv(Cp, p["conv_C"], state.conv_C if state else None)
+    cx = jax.nn.silu(cx.astype(jnp.float32)).astype(u.dtype)
+    cB = jax.nn.silu(cB.astype(jnp.float32)).astype(u.dtype)
+    cC = jax.nn.silu(cC.astype(jnp.float32)).astype(u.dtype)
+
+    xh = cx.reshape(b, l, nh, hp)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if decode:
+        assert state is not None
+        y, new_ssm = _ssd_recurrent(xh, dtf, A, cB, cC, state.ssm)
+    else:
+        init = state.ssm if state is not None else None
+        y, new_ssm = _ssd_chunked(xh, dtf, A, cB, cC, s.chunk_size, init)
+
+    y = y + p["D"].astype(u.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, di)
+
+    # Gated RMSNorm: norm(y * silu(z)) * w  (mamba2's RMSNormGated)
+    gated = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(gated), axis=-1, keepdims=True)
+    gated = gated * jax.lax.rsqrt(var + 1e-5) * p["norm_w"].astype(jnp.float32)
+    y = gated.astype(u.dtype)
+
+    out = jnp.einsum("bli,id->bld", y, p["w_out"])
+    new_state = SSMState(new_cx, new_cB, new_cC, new_ssm)
+    return out, new_state

@@ -1,0 +1,5 @@
+from repro.serving.engine import IterStats, PapiEngine, ServeRequest, ServeResult
+from repro.serving.sampler import greedy, sample
+
+__all__ = ["IterStats", "PapiEngine", "ServeRequest", "ServeResult",
+           "greedy", "sample"]

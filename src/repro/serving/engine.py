@@ -1,0 +1,321 @@
+"""PAPI serving engine: mixed continuous batching + speculative decoding +
+dynamic FC-path scheduling.
+
+The runtime loop the paper describes (§5.2.2), realized over the JAX models:
+
+  1. admit waiting requests into free KV-cache slots (mixed continuous
+     batching — token-level scheduling, no drain barrier);
+  2. run one decoding iteration for every active slot: either a plain
+     decode step (TLP=1) or a draft-propose / target-verify speculative
+     window (TLP>1, greedy & lossless);
+  3. gather the iteration's output tokens, count <|eos|>, update the
+     scheduler's RLP; the scheduler compares RLP*TLP against the calibrated
+     alpha and picks the FC execution path ("pu" MXU vs "pim" fc_gemv) for
+     the *next* iteration.
+
+Slots are fixed-capacity (static shapes: the decode step is compiled once
+per TLP value).  Inactive slots decode garbage that is masked out — the
+standard padded-batch serving trade.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import PapiScheduler
+from repro.models import decode_step, init_cache, prefill
+from repro.models.linear import fc_variant
+from repro.serving.sampler import greedy
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    req_id: int
+    prompt: list[int]
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class ServeResult:
+    req_id: int
+    tokens: list[int]
+    prompt_len: int
+    iterations: int
+    finished_reason: str = "length"
+
+
+@dataclasses.dataclass
+class IterStats:
+    iteration: int
+    rlp: int
+    tlp: int
+    ai_estimate: float
+    fc_variant: str
+    new_tokens: int
+    accepted: float        # mean accepted tokens per active slot (spec dec)
+    wall_s: float
+
+
+class PapiEngine:
+    """Single-host serving engine (the multi-pod deployment lowers the same
+    step functions through `launch.serve`)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        max_slots: int = 8,
+        cache_capacity: int = 256,
+        prefill_len: int = 64,
+        alpha: float = 32.0,
+        spec_len: int = 1,
+        draft: tuple[ModelConfig, Any] | None = None,
+        eos_token: int = 2,
+        pim_interpret: bool | None = None,
+    ) -> None:
+        assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
+        self.cfg, self.params = cfg, params
+        self.max_slots = max_slots
+        self.capacity = cache_capacity
+        self.prefill_len = prefill_len
+        self.eos_token = eos_token
+        self.spec_len = spec_len
+        self.pim_interpret = pim_interpret
+        self.scheduler = PapiScheduler(cfg, alpha=alpha, tlp=spec_len,
+                                       eos_token=eos_token)
+        self.scheduler.initial_schedule(0, spec_len)
+
+        self.cache = init_cache(cfg, max_slots, cache_capacity)
+        # per-slot host state
+        self.slot_req: list[ServeRequest | None] = [None] * max_slots
+        self.slot_tokens: list[list[int]] = [[] for _ in range(max_slots)]
+        self.slot_last: np.ndarray = np.zeros(max_slots, np.int32)
+        self.queue: list[ServeRequest] = []
+        self.results: list[ServeResult] = []
+        self.stats: list[IterStats] = []
+        self.iteration = 0
+
+        if draft is not None:
+            self.draft_cfg, self.draft_params = draft
+            self.draft_cache = init_cache(self.draft_cfg, max_slots,
+                                          cache_capacity)
+        else:
+            self.draft_cfg = self.draft_params = self.draft_cache = None
+
+        self._decode_jit: dict[tuple[str, int], Any] = {}
+        self._prefill_jit: dict[str, Any] = {}
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: ServeRequest) -> None:
+        self.queue.append(req)
+
+    @property
+    def active_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def run(self, max_iterations: int = 10_000) -> list[ServeResult]:
+        while (self.queue or self.active_slots) and self.iteration < max_iterations:
+            self.step()
+        return self.results
+
+    # ------------------------------------------------------------- internals
+    def _get_decode(self, which: str):
+        tlp = 1 if which == "draft" else (self.spec_len if which == "verify" else 1)
+        key = (which, tlp)
+        if key not in self._decode_jit:
+            cfg = self.draft_cfg if which == "draft" else self.cfg
+            fn = partial(decode_step, cfg)
+            self._decode_jit[key] = jax.jit(fn)
+        return self._decode_jit[key]
+
+    def _admit(self) -> int:
+        """Mixed continuous batching: fill free slots from the queue."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        admitted = 0
+        while self.queue and free:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            # never let a request outgrow its slot's KV capacity
+            budget = self.capacity - min(len(req.prompt), self.prefill_len)
+            req.max_new_tokens = min(req.max_new_tokens,
+                                     budget - max(self.spec_len, 1))
+            self._prefill_slot(slot, req)
+            if self.draft_cfg is not None:
+                self._prefill_slot(slot, req, draft=True)
+            # prefill already produced the first output token
+            first = int(self.slot_last[slot])
+            self.slot_tokens[slot] = [first]
+            if first == self.eos_token or req.max_new_tokens <= 1:
+                reason = "eos" if first == self.eos_token else "length"
+                self.results.append(ServeResult(
+                    req.req_id, [first], len(req.prompt), self.iteration,
+                    reason,
+                ))
+                free.insert(0, slot)     # slot stays available
+            else:
+                self.slot_req[slot] = req
+                admitted += 1            # counts toward RLP
+        return admitted
+
+    def _prefill_slot(self, slot: int, req: ServeRequest,
+                      draft: bool = False) -> None:
+        cfg = self.draft_cfg if draft else self.cfg
+        params = self.draft_params if draft else self.params
+        cache = self.draft_cache if draft else self.cache
+        p = min(len(req.prompt), self.prefill_len)
+        toks = np.zeros((1, self.prefill_len), np.int32)
+        toks[0, :p] = req.prompt[-self.prefill_len:][:p]
+        batch = {
+            "tokens": jnp.asarray(toks),
+            "prompt_lens": jnp.asarray([p], jnp.int32),
+        }
+        tmp_cache = init_cache(cfg, 1, self.capacity)
+        key = "draft" if draft else "main"
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = jax.jit(partial(prefill, cfg))
+        logits, tmp_cache = self._prefill_jit[key](params, batch, tmp_cache)
+        # scatter the single-request cache into the slot
+        for k in ("k", "v"):
+            if k in cache:
+                cache[k] = cache[k].at[:, slot].set(tmp_cache[k][:, 0])
+        if "ssm" in cache:
+            cache["ssm"] = jax.tree.map(
+                lambda d, s: d.at[:, slot].set(s[:, 0]), cache["ssm"],
+                tmp_cache["ssm"],
+            )
+        cache["pos"] = cache["pos"].at[slot].set(p)
+        if not draft:
+            self.slot_last[slot] = int(np.argmax(np.asarray(logits[0])))
+
+    def _decode_all(self) -> tuple[np.ndarray, np.ndarray]:
+        """One decoding iteration for all slots.  Returns (new token matrix
+        [slots, <=tlp], accepted counts [slots])."""
+        variant = self.scheduler.fc_assignment
+        tlp = self.spec_len
+        with fc_variant(variant, interpret=self.pim_interpret):
+            if tlp <= 1 or self.draft_cfg is None:
+                toks = jnp.asarray(self.slot_last[:, None])
+                logits, self.cache = self._get_decode("plain")(
+                    self.params, self.cache, toks
+                )
+                nxt = np.asarray(greedy(logits[:, -1]))
+                return nxt[:, None], np.ones(self.max_slots)
+            return self._speculative_iteration()
+
+    def _speculative_iteration(self) -> tuple[np.ndarray, np.ndarray]:
+        """Greedy draft-propose / target-verify (lossless)."""
+        k = self.spec_len
+        draft_fn = self._get_decode("draft")
+        # 1) draft proposes k-1 tokens autoregressively.  It runs k steps —
+        # the extra step writes KV for the window's final token, so the
+        # draft cache covers every token the target might accept (keeps the
+        # two caches in lockstep when the full window is accepted).
+        proposals = [self.slot_last.copy()]
+        last = jnp.asarray(self.slot_last[:, None])
+        for _ in range(k):
+            logits, self.draft_cache = draft_fn(
+                self.draft_params, self.draft_cache, last
+            )
+            nxt = greedy(logits[:, -1])
+            proposals.append(np.asarray(nxt))
+            last = nxt[:, None]
+        window = np.stack(proposals[:k], axis=1)          # [slots, k]
+
+        # 2) target verifies the window in ONE decode step (TLP = k)
+        logits, self.cache = self._get_decode("verify")(
+            self.params, self.cache, jnp.asarray(window)
+        )
+        target = np.asarray(greedy(logits))               # [slots, k]
+
+        # 3) accept longest matching prefix; roll back caches per slot
+        accepted = np.zeros(self.max_slots, np.int64)
+        out = np.zeros((self.max_slots, k), np.int32)
+        for s in range(self.max_slots):
+            n = 0
+            while n < k - 1 and window[s, n + 1] == target[s, n]:
+                n += 1
+            accepted[s] = n + 1                            # +1: free token
+            out[s, : n + 1] = target[s, : n + 1]
+        # target cache advanced by k for every slot; rewind to accepted
+        rewind = jnp.asarray(k - accepted, jnp.int32)
+        self.cache["pos"] = self.cache["pos"] - rewind
+        # resync draft cache to the target position
+        if self.draft_cache is not None:
+            self.draft_cache["pos"] = jnp.minimum(
+                self.draft_cache["pos"], self.cache["pos"]
+            )
+        return out, accepted.astype(np.float64)
+
+    def step(self) -> None:
+        t0 = time.perf_counter()
+        admitted = self._admit()
+        active = self.active_slots
+        if not active:
+            self.scheduler.observe_counts(0, admitted)
+            return
+
+        out, accepted = self._decode_all()
+
+        # host-side bookkeeping: append tokens, detect eos / length
+        iter_tokens: list[int] = []
+        finished = 0
+        for s in active:
+            req = self.slot_req[s]
+            assert req is not None
+            n_acc = int(accepted[s]) if accepted is not None else 1
+            for j in range(n_acc):
+                tok = int(out[s, j])
+                self.slot_tokens[s].append(tok)
+                iter_tokens.append(tok)
+                if tok == self.eos_token or (
+                    len(self.slot_tokens[s]) >= req.max_new_tokens
+                ):
+                    reason = "eos" if tok == self.eos_token else "length"
+                    self.results.append(ServeResult(
+                        req.req_id, self.slot_tokens[s], len(req.prompt),
+                        self.iteration, reason,
+                    ))
+                    self.slot_req[s] = None
+                    finished += 1
+                    break
+            else:
+                self.slot_last[s] = self.slot_tokens[s][-1]
+                continue
+            # slot freed: park its position on a safe nonzero value
+            self.slot_last[s] = 0
+
+        # park inactive slots at pos=1 so their garbage decode can't creep
+        # past the cache capacity (they are masked from outputs anyway)
+        inactive = [i for i in range(self.max_slots) if self.slot_req[i] is None]
+        if inactive:
+            idx = jnp.asarray(inactive)
+            self.cache["pos"] = self.cache["pos"].at[idx].set(1)
+            if self.draft_cache is not None:
+                self.draft_cache["pos"] = self.draft_cache["pos"].at[idx].set(1)
+
+        # 4) the PAPI runtime scheduling step (§5.2.2)
+        self.scheduler.observe_counts(finished, admitted)
+        self.iteration += 1
+        self.stats.append(IterStats(
+            iteration=self.iteration,
+            rlp=self.scheduler.rlp,
+            tlp=self.scheduler.tlp,
+            ai_estimate=self.scheduler.ai_estimate,
+            fc_variant=self.scheduler.fc_assignment,
+            new_tokens=len(iter_tokens),
+            accepted=float(np.mean(accepted[active])) if len(active) else 0.0,
+            wall_s=time.perf_counter() - t0,
+        ))
+
+    def set_spec_len(self, tlp: int) -> None:
+        """Host updates the TLP register (dynamic speculation length)."""
+        self.spec_len = tlp
+        self.scheduler.set_tlp(tlp)

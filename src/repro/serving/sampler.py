@@ -1,0 +1,21 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits [..., V] -> token ids [...]."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

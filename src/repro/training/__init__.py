@@ -1,0 +1,30 @@
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import (
+    compress,
+    compress_with_feedback,
+    decompress,
+    init_error,
+)
+from repro.training.optim import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    init_adamw,
+    lr_schedule,
+    zero1_logical_axes,
+)
+from repro.training.train_loop import (
+    TrainConfig,
+    TrainResult,
+    make_train_step,
+    run_training,
+)
+from repro.training.watchdog import StepWatchdog, StragglerEvent
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "CheckpointManager", "StepWatchdog",
+    "StragglerEvent", "TrainConfig", "TrainResult", "adamw_update",
+    "compress", "compress_with_feedback", "decompress", "init_adamw",
+    "init_error", "lr_schedule", "make_train_step", "run_training",
+    "zero1_logical_axes",
+]

@@ -1,0 +1,142 @@
+"""Checkpointing: async save, elastic restore, preemption handling.
+
+Checkpoints are host-gathered numpy archives (one .npz per pytree plus a
+JSON manifest), so a restart may use a *different* mesh shape: restore
+device_puts each leaf under the new sharding (elastic re-sharding on load).
+Saves run on a background thread (async: the step loop never blocks on
+disk); a SIGTERM (preemption) triggers a final synchronous checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._preempted = False
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, trees: dict[str, PyTree],
+             blocking: bool = False) -> None:
+        """Snapshot to host memory NOW, write to disk asynchronously."""
+        host = {name: _flatten_with_paths(t) for name, t in trees.items()}
+        self.wait()                      # one in-flight save at a time
+
+        def write():
+            path = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            for name, flat in host.items():
+                np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "trees": sorted(host),
+                           "time": time.time()}, f)
+            # idempotent publish: re-saving a step (resume overlap,
+            # preemption double-fire) replaces the previous snapshot
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.replace(tmp, path)        # atomic publish
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            path = os.path.join(self.directory, f"step_{s:08d}")
+            for root, dirs, files in os.walk(path, topdown=False):
+                for fn in files:
+                    os.unlink(os.path.join(root, fn))
+                for d in dirs:
+                    os.rmdir(os.path.join(root, d))
+            os.rmdir(path)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, templates: dict[str, PyTree],
+                shardings: dict[str, PyTree] | None = None) -> dict[str, PyTree]:
+        """Restore into the structure of `templates`.  If `shardings` is
+        given, each leaf is device_put under its (possibly new-mesh)
+        sharding — elastic restore."""
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        out: dict[str, PyTree] = {}
+        for name, template in templates.items():
+            data = np.load(os.path.join(path, f"{name}.npz"))
+            flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+            leaves = []
+            shard_tree = shardings.get(name) if shardings else None
+            flat_s = (treedef.flatten_up_to(shard_tree)
+                      if shard_tree is not None else [None] * len(flat_t))
+            for (pth, leaf), shd in zip(flat_t, flat_s):
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in pth)
+                arr = data[key]
+                assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+                if shd is not None:
+                    leaves.append(jax.device_put(arr.astype(leaf.dtype), shd))
+                else:
+                    leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+            out[name] = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), leaves
+            )
+        return out
+
+    # ----------------------------------------------------------- preemption
+    def install_preemption_handler(self, save_fn: Callable[[], None]) -> None:
+        """On SIGTERM: write a final blocking checkpoint, then re-raise."""
+        prev = signal.getsignal(signal.SIGTERM)
+
+        def handler(signum, frame):
+            self._preempted = True
+            save_fn()
+            if callable(prev):
+                prev(signum, frame)
+
+        signal.signal(signal.SIGTERM, handler)
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted

@@ -1,0 +1,123 @@
+"""AdamW from scratch (pytree ops, no optax) with ZeRO-1 state sharding.
+
+State layout: m/v in f32 regardless of param dtype (mixed-precision master
+statistics).  `zero1_logical_axes` assigns the optimizer states an extra
+`fsdp` (-> data-axis) sharding on their first shardable dim when the params
+themselves are replicated over data — the ZeRO-1 trick: each data shard owns
+a slice of the optimizer state and the update, weights stay replicated.
+When the rule table already shards params over `fsdp` (FSDP/ZeRO-3 mode)
+states simply inherit the param sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # scalar int32
+    m: PyTree                # first moment (f32)
+    v: PyTree                # second moment (f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def init_adamw(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: PyTree,
+    grads: PyTree,
+    state: AdamWState,
+) -> tuple[PyTree, AdamWState, dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard LLM practice)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics
+
+
+def zero1_logical_axes(param_axes: PyTree, param_shapes: PyTree) -> PyTree:
+    """Logical axes for optimizer states (ZeRO-1).
+
+    If a param already has an `fsdp` axis, states inherit it.  Otherwise the
+    first dim not already mapped to the `model` family gets `fsdp`, sharding
+    the state (and its update) across the data axis.
+    """
+    def st_axes(axes, shape):
+        axes = tuple(axes)
+        if "fsdp" in axes:
+            return axes
+        out = list(axes)
+        for i, (a, d) in enumerate(zip(axes, shape)):
+            if a is None and d >= 64:      # shardable dim
+                out[i] = "fsdp"
+                break
+        return tuple(out)
+
+    return jax.tree.map(
+        lambda a, s: st_axes(a, s.shape), param_axes, param_shapes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

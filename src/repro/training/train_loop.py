@@ -1,0 +1,158 @@
+"""The training driver: jitted step with microbatch gradient accumulation,
+AdamW (ZeRO-1-shardable states), optional int8 grad compression with error
+feedback, async checkpointing with elastic restore, preemption handling and
+a straggler watchdog.
+
+`make_train_step(cfg, opt)` builds one jit-compilable function
+    (params, opt_state, err, batch) -> (params, opt_state, err, metrics)
+where `batch` leaves carry a leading [accum] microbatch axis that a
+lax.scan accumulates over — one optimizer application per global step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import forward_train, init_params
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import compress_with_feedback, init_error
+from repro.training.optim import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.training.watchdog import StepWatchdog
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    accum: int = 1
+    remat: bool = True
+    compress_grads: bool = False
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+
+
+def make_train_step(
+    mcfg: ModelConfig,
+    ocfg: AdamWConfig,
+    *,
+    accum: int = 1,
+    remat: bool = True,
+    compress_grads: bool = False,
+) -> Callable:
+    def loss_fn(params, microbatch):
+        loss, metrics = forward_train(mcfg, params, microbatch, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, err: PyTree, batch):
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), batch)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        if compress_grads:
+            # int8 + error feedback brackets the DP all-reduce
+            grads, err = compress_with_feedback(grads, err)
+
+        params, opt_state, om = adamw_update(ocfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, err, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list[float]
+    final_step: int
+    straggler_events: int
+    resumed_from: int | None
+
+
+def run_training(
+    mcfg: ModelConfig,
+    tcfg: TrainConfig,
+    dcfg: DataConfig,
+    ocfg: AdamWConfig | None = None,
+    resume: bool = False,
+) -> TrainResult:
+    """Single-host end-to-end loop (the multi-pod version lowers the same
+    train_step through launch.train with mesh shardings)."""
+    ocfg = ocfg or AdamWConfig(total_steps=tcfg.steps)
+    ckpt = CheckpointManager(tcfg.checkpoint_dir)
+
+    params = init_params(mcfg, jax.random.PRNGKey(tcfg.seed))
+    opt_state = init_adamw(params)
+    err = init_error(params) if tcfg.compress_grads else {}
+    start_step = 0
+    resumed_from = None
+
+    if resume and ckpt.latest_step() is not None:
+        start_step = ckpt.latest_step()
+        restored = ckpt.restore(
+            start_step,
+            {"params": params, "opt": opt_state},
+        )
+        params, opt_state = restored["params"], restored["opt"]
+        resumed_from = start_step
+
+    step_fn = jax.jit(
+        make_train_step(mcfg, ocfg, accum=tcfg.accum, remat=tcfg.remat,
+                        compress_grads=tcfg.compress_grads),
+        donate_argnums=(0, 1, 2),
+    )
+
+    def save(step: int, blocking: bool = False) -> None:
+        ckpt.save(step, {"params": params, "opt": opt_state},
+                  blocking=blocking)
+
+    ckpt.install_preemption_handler(lambda: save(start_step, blocking=True))
+    watchdog = StepWatchdog()
+    losses: list[float] = []
+
+    for step in range(start_step, tcfg.steps):
+        watchdog.start_step(step)
+        raw = make_batch(mcfg, dcfg, step)
+        if tcfg.accum > 1:
+            raw = jax.tree.map(
+                lambda x: x.reshape((tcfg.accum, x.shape[0] // tcfg.accum)
+                                    + x.shape[1:]),
+                raw,
+            )
+        batch = jax.tree.map(jnp.asarray, raw)
+        params, opt_state, err, metrics = step_fn(params, opt_state, err, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        watchdog.end_step()
+
+        if (step + 1) % tcfg.checkpoint_every == 0 or step + 1 == tcfg.steps:
+            save(step + 1)
+        if (step + 1) % tcfg.log_every == 0:
+            print(f"step {step+1:5d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+    ckpt.wait()
+    return TrainResult(losses, tcfg.steps, len(watchdog.events), resumed_from)

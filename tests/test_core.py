@@ -1,0 +1,213 @@
+"""Tests for the paper's core: AI estimation, scheduler, PIM models, system
+simulators — including hypothesis property tests on the invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.configs.paper_models import GPT3_66B, GPT3_175B, LLAMA_65B
+from repro.core import ai, pim
+from repro.core.scheduler import FC_PIM, FC_PU, PapiScheduler
+from repro.core.system import (
+    calibrate_alpha_system,
+    compare_systems,
+    simulate_decode,
+)
+from repro.core.traces import generate_trace
+
+
+# ---------------------------------------------------------------------------
+# §5.1 arithmetic intensity
+# ---------------------------------------------------------------------------
+
+class TestAI:
+    def test_eq1_matches_paper_example(self):
+        """§3.3: GPT-3-ish FC at batch 4, spec 8 has AI ~= 31.7 FLOP/B."""
+        got = ai.fc_ai_exact(32, 7168)  # OPT-30B h
+        assert 28 < got < 33
+
+    @given(st.integers(1, 512), st.integers(1024, 16384))
+    @settings(max_examples=200, deadline=None)
+    def test_eq2_upper_bounds_eq1(self, m, h):
+        """AI_exact < m always, and -> m as h -> inf (Eq. 2 derivation)."""
+        exact = ai.fc_ai_exact(m, h)
+        assert exact < m + 1e-9
+
+    @given(st.integers(1, 128))
+    @settings(max_examples=50, deadline=None)
+    def test_eq2_error_small_for_large_h(self, m):
+        """For GPT-3 175B's h=12288 the Eq.2 estimate is within 10% (Fig 6)."""
+        exact = ai.fc_ai_exact(m, 12288)
+        est = ai.fc_ai_estimate(m, 1)
+        assert abs(est - exact) / exact < 0.10
+
+    def test_eq2_error_largest_for_smallest_h(self):
+        """qwen2-0.5b (h=896) stresses the large-h assumption hardest."""
+        errs = {
+            name: abs(ai.fc_ai_estimate(64, 1) - ai.fc_ai_exact(64, get_config(name).d_model))
+            / ai.fc_ai_exact(64, get_config(name).d_model)
+            for name in ("qwen2-0.5b", "command-r-plus-104b")
+        }
+        assert errs["qwen2-0.5b"] > errs["command-r-plus-104b"]
+
+    def test_moe_effective_parallelism(self):
+        """§6.5: per-expert parallelism is RLP*TLP*top_k/E."""
+        olmoe = get_config("olmoe-1b-7b")
+        dense = get_config("granite-8b")
+        assert ai.effective_parallelism(olmoe, 64, 2) == 64 * 2 * 8 / 64
+        assert ai.effective_parallelism(dense, 64, 2) == 128
+
+
+# ---------------------------------------------------------------------------
+# §5.2 scheduler
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def _sched(self, alpha=32.0, tlp=2):
+        return PapiScheduler(get_config("granite-8b"), alpha=alpha, tlp=tlp)
+
+    def test_initial_schedule(self):
+        s = self._sched()
+        assert s.initial_schedule(64, 2) == FC_PU        # 128 > 32
+        assert s.initial_schedule(8, 2) == FC_PIM        # 16 <= 32
+
+    def test_eos_counting_drives_reschedule(self):
+        """RLP decays via <eos> counts until the FC kernel flips to PIM."""
+        s = self._sched(alpha=32.0, tlp=1)
+        s.initial_schedule(64, 1)
+        assert s.fc_assignment == FC_PU
+        eos, other = 2, 0
+        flipped_at = None
+        for it in range(40):
+            toks = [eos] * 2 + [other] * (s.rlp - 2)
+            s.observe_outputs(toks)
+            if s.fc_assignment == FC_PIM and flipped_at is None:
+                flipped_at = it
+        assert flipped_at is not None
+        assert s.num_reschedules >= 1
+
+    def test_tlp_register_update(self):
+        s = self._sched(alpha=32.0, tlp=1)
+        s.initial_schedule(16, 1)
+        assert s.fc_assignment == FC_PIM
+        s.set_tlp(8)                      # host bumps speculation length
+        s.observe_counts(finished=0)
+        assert s.fc_assignment == FC_PU   # 16*8 = 128 > 32
+
+    def test_continuous_batching_admission(self):
+        s = self._sched(alpha=32.0, tlp=1)
+        s.initial_schedule(16, 1)
+        s.observe_counts(finished=0, admitted=32)
+        assert s.rlp == 48
+        assert s.fc_assignment == FC_PU
+
+    @given(st.integers(1, 256), st.integers(1, 8),
+           st.floats(0.5, 256.0))
+    @settings(max_examples=200, deadline=None)
+    def test_decision_monotone_in_parallelism(self, rlp, tlp, alpha):
+        """Property: the decision is a threshold function of RLP*TLP."""
+        s = PapiScheduler(get_config("granite-8b"), alpha=alpha, tlp=tlp)
+        s.rlp = rlp
+        want = FC_PU if rlp * tlp > alpha else FC_PIM
+        assert s._decide() == want
+
+    def test_attention_always_pinned(self):
+        s = self._sched()
+        assert s.attention_assignment == "attn_pim"
+
+
+# ---------------------------------------------------------------------------
+# §6 PIM models
+# ---------------------------------------------------------------------------
+
+class TestPIM:
+    def test_fig7_energy_fractions(self):
+        assert pim.energy_breakdown(1)["dram"] == pytest.approx(0.967, abs=0.003)
+        assert pim.energy_breakdown(64)["dram"] == pytest.approx(0.331, abs=0.005)
+
+    def test_fig7c_power_claims(self):
+        # 1P1B exceeds the budget at reuse=1; 1P2B fits; 4P1B fits iff r>=4.
+        assert pim.ATTACC.power_at(1) > pim.HBM_POWER_BUDGET_W
+        assert pim.HBM_PIM.power_at(1) < pim.HBM_POWER_BUDGET_W
+        assert pim.FC_PIM.power_at(4) <= pim.HBM_POWER_BUDGET_W + 1
+        assert pim.FC_PIM.power_at(3) > pim.HBM_POWER_BUDGET_W
+
+    def test_eq34_area_constraint(self):
+        # 4P1B: 96 banks/die, within the 121 mm^2 die budget (Eq. 4).
+        assert pim.FC_PIM.banks_per_die == 96
+        assert pim.FC_PIM.area_per_die_mm2() <= pim.A_DIE_MM2
+        # capacity consequence the paper states: FC-PIM stacks hold 12 GB.
+        assert pim.FC_PIM.capacity_bytes == pytest.approx(12e9)
+
+    def test_fig4_fc_crossover(self):
+        """PIM wins the FC kernel at low parallelism, GPU at high (Fig. 4)."""
+        h = 7168
+        lo_pim = pim.FC_PIM.gemv_time(4, h, h // 30)
+        lo_gpu = pim.gpu_fc_time(4, h, h)
+        hi_pim = pim.FC_PIM.gemv_time(512, h, h // 30)
+        hi_gpu = pim.gpu_fc_time(512, h, h)
+        assert lo_pim < lo_gpu
+        assert hi_gpu < hi_pim
+
+    @given(st.integers(1, 512))
+    @settings(max_examples=50, deadline=None)
+    def test_gemv_time_monotone(self, m):
+        t1 = pim.FC_PIM.gemv_time(m, 4096, 4096)
+        t2 = pim.FC_PIM.gemv_time(m + 1, 4096, 4096)
+        assert t2 >= t1 - 1e-15
+
+
+# ---------------------------------------------------------------------------
+# §7 end-to-end simulators
+# ---------------------------------------------------------------------------
+
+class TestSystem:
+    @pytest.fixture(scope="class")
+    def results(self):
+        trace = generate_trace("creative-writing", 16, seed=0)
+        return compare_systems(LLAMA_65B, trace, batch_size=16, spec_len=2)
+
+    def test_papi_fastest(self, results):
+        papi = results["papi"].time_s
+        for name, r in results.items():
+            assert papi <= r.time_s * 1.0001, name
+
+    def test_ordering_matches_paper(self, results):
+        """Fig. 8 ordering: papi < a100+attacc ~ a100+hbmpim << attacc-only."""
+        assert results["a100_attacc"].time_s < results["attacc_only"].time_s
+        assert results["papi"].time_s < results["a100_attacc"].time_s
+
+    def test_energy_papi_beats_gpu_baseline(self, results):
+        assert (results["papi"].energy_per_token
+                < results["a100_attacc"].energy_per_token)
+
+    def test_scheduler_actually_reschedules(self):
+        """With decaying RLP the PAPI run must flip assignments >= once."""
+        trace = generate_trace("creative-writing", 48, seed=1)
+        r = simulate_decode("papi", LLAMA_65B, trace, 48, 1)
+        assert r.reschedules >= 1
+
+    def test_headline_speedups_in_band(self):
+        """Mean speedups over the paper's setting grid land near the paper's
+        reported 1.8x / 1.9x (exact-match band documented in EXPERIMENTS.md)."""
+        trace = generate_trace("creative-writing", 64, seed=0)
+        ratios = {"a100_attacc": [], "a100_hbmpim": [], "attacc_only": []}
+        for cfg in (LLAMA_65B, GPT3_66B, GPT3_175B):
+            for bs in (4, 16, 64):
+                for sl in (1, 2, 4):
+                    res = compare_systems(
+                        cfg, trace[:bs], bs, sl,
+                        systems=("papi",) + tuple(ratios),
+                    )
+                    papi = res["papi"].time_s
+                    for s in ratios:
+                        ratios[s].append(res[s].time_s / papi)
+        mean = {s: float(np.mean(v)) for s, v in ratios.items()}
+        assert 1.5 < mean["a100_attacc"] < 2.1      # paper: 1.8
+        assert 1.5 < mean["a100_hbmpim"] < 2.2      # paper: 1.9
+        assert mean["attacc_only"] > 4.0            # paper: 11.1 (see §Repro)
+
+    def test_alpha_calibration_sane(self):
+        a = calibrate_alpha_system(LLAMA_65B)
+        assert 4 < a < 512

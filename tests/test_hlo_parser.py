@@ -1,0 +1,73 @@
+"""Unit tests for the HLO text analyzer on synthetic-but-realistic IR."""
+from repro.launch.hlo import HLOAnalysis
+
+SYNTH = """
+HloModule jit_fn, entry_computation_layout={...}
+
+%region_body.1 (arg: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %arg = (s32[], f32[8,128]) parameter(0)
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %dot.1 = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,256]{1,0} all-gather(%dot.1), replica_groups=[8,2]<=[16], dimensions={1}
+  %one = s32[] constant(1)
+  %next = s32[] add(%iv, %one)
+  ROOT %out = (s32[], f32[8,128]) tuple(%next, %dot.1)
+}
+
+%region_cond.2 (arg.1: (s32[], f32[8,128])) -> pred[] {
+  %arg.1 = (s32[], f32[8,128]) parameter(0)
+  %iv.1 = s32[] get-tuple-element(%arg.1), index=0
+  %bound = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%iv.1, %bound), direction=LT
+}
+
+ENTRY %main.3 (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %p0)
+  %loop = (s32[], f32[8,128]) while(%init), condition=%region_cond.2, body=%region_body.1
+  %res = f32[8,128]{1,0} get-tuple-element(%loop), index=1
+  %ar = f32[8,128]{1,0} all-reduce(%res), replica_groups={{0,1,2,3}}, to_apply=%add.red
+  ROOT %copy = f32[8,128]{1,0} copy(%ar)
+}
+
+%add.red (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+
+
+def test_dot_flops_with_trip_count():
+    h = HLOAnalysis(SYNTH, num_devices=16)
+    # dot: 2 * (8*128) * 128 = 262144 flops, x24 loop trips
+    assert h.entry_cost.flops == 2 * 8 * 128 * 128 * 24
+
+
+def test_collectives_with_groups_and_trips():
+    h = HLOAnalysis(SYNTH, num_devices=16)
+    # all-gather in loop: out 8*256*4B, group size 2 -> wire (2-1)/2 * bytes
+    ag = 8 * 256 * 4 * (1 / 2) * 24
+    # all-reduce at entry: 8*128*4B, group {0,1,2,3} size 4 -> 2*(3/4)*bytes
+    ar = 2 * 8 * 128 * 4 * (3 / 4)
+    got = h.entry_cost.collective_ops
+    assert abs(got["all-gather"] - ag) < 1e-6
+    assert abs(got["all-reduce"] - ar) < 1e-6
+
+
+def test_trip_count_ignores_sentinels():
+    txt = SYNTH.replace("constant(24)", "constant(2147483647)")
+    h = HLOAnalysis(txt, num_devices=16)
+    # INT_MAX ignored -> trip count falls back to 1
+    assert h.entry_cost.flops == 2 * 8 * 128 * 128
+
+
+def test_collective_sites_multipliers():
+    h = HLOAnalysis(SYNTH, num_devices=16)
+    sites = h.collective_sites()
+    by_op = {s["op"]: s for s in sites}
+    assert by_op["all-gather"]["mult"] == 24.0
+    assert by_op["all-reduce"]["mult"] == 1.0

@@ -1,0 +1,140 @@
+"""Serving engine integration tests: continuous batching, speculative
+decoding losslessness, and PAPI's scheduler in the loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving import PapiEngine, ServeRequest
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk_engine(cfg, params, **kw):
+    defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
+                    alpha=6.0, eos_token=1)
+    defaults.update(kw)
+    return PapiEngine(cfg, params, **defaults)
+
+
+def test_continuous_batching_completes_all(small_model):
+    cfg, params = small_model
+    eng = _mk_engine(cfg, params)
+    for i in range(7):           # more requests than slots
+        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=6))
+    results = eng.run(max_iterations=200)
+    assert len(results) == 7
+    assert sorted(r.req_id for r in results) == list(range(7))
+    for r in results:
+        assert 1 <= len(r.tokens) <= 6
+
+
+def test_scheduler_flips_variant_as_rlp_decays(small_model):
+    """Requests with staggered lengths: RLP decays, AI crosses alpha, and the
+    FC path flips pu -> pim exactly as §5.2.2 prescribes."""
+    cfg, params = small_model
+    eng = _mk_engine(cfg, params, max_slots=8, alpha=4.0)
+    for i in range(8):
+        eng.submit(ServeRequest(i, [3, 5], max_new_tokens=2 + 3 * i))
+    eng.run(max_iterations=200)
+    variants = [s.fc_variant for s in eng.stats if s.rlp > 0]
+    assert "pu" in variants     # 8 active > alpha=4
+    assert "pim" in variants    # tail with < 4 active
+    assert eng.scheduler.num_reschedules >= 1
+
+
+def test_engine_output_matches_raw_decode(small_model):
+    """The engine's greedy output for a single request must equal a direct
+    prefill+decode loop on the raw model (slots/batching add nothing)."""
+    cfg, params = small_model
+    prompt = [3, 5, 7, 11]
+    n_new = 5
+
+    cache = init_cache(cfg, 1, 64)
+    logits, cache = prefill(
+        cfg, params,
+        {"tokens": jnp.asarray([prompt], jnp.int32),
+         "prompt_lens": jnp.asarray([len(prompt)], jnp.int32)},
+        cache,
+    )
+    want = []
+    tok = int(np.argmax(np.asarray(logits[0])))
+    want.append(tok)
+    for _ in range(n_new - 1):
+        lg, cache = decode_step(cfg, params, cache, jnp.asarray([[tok]]))
+        tok = int(np.argmax(np.asarray(lg[0, 0])))
+        want.append(tok)
+
+    eng = _mk_engine(cfg, params, max_slots=2)
+    eng.submit(ServeRequest(0, prompt, max_new_tokens=n_new))
+    res = eng.run(max_iterations=50)
+    assert res[0].tokens[:n_new] == want[:len(res[0].tokens)]
+
+
+def test_speculative_decoding_is_lossless(small_model):
+    """Speculative output must equal plain greedy decoding token-for-token —
+    the draft only changes *how fast* tokens appear, never *which* tokens."""
+    cfg, params = small_model
+    draft_cfg = get_config("qwen2-0.5b").reduced()
+    draft_params = init_params(draft_cfg, jax.random.PRNGKey(9))
+    prompt = [3, 5, 7]
+    n_new = 8
+
+    plain = _mk_engine(cfg, params, max_slots=2)
+    plain.submit(ServeRequest(0, prompt, max_new_tokens=n_new))
+    want = plain.run(max_iterations=100)[0].tokens
+
+    spec = _mk_engine(cfg, params, max_slots=2, spec_len=3,
+                      draft=(draft_cfg, draft_params))
+    spec.submit(ServeRequest(0, prompt, max_new_tokens=n_new))
+    got = spec.run(max_iterations=100)[0].tokens
+
+    n = min(len(want), len(got))
+    assert got[:n] == want[:n]
+
+
+def test_speculative_with_perfect_draft_accepts_everything(small_model):
+    """Draft == target => every proposal accepted => ~spec_len tokens/iter."""
+    cfg, params = small_model
+    eng = _mk_engine(cfg, params, max_slots=2, spec_len=4,
+                     draft=(cfg, params))
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=12))
+    res = eng.run(max_iterations=100)
+    gen_iters = [s for s in eng.stats if s.new_tokens > 0]
+    mean_acc = np.mean([s.accepted for s in gen_iters])
+    assert mean_acc > 3.5        # near-perfect acceptance of 4-token windows
+    assert len(res) == 1
+
+
+def test_tlp_register_update_reflected(small_model):
+    cfg, params = small_model
+    eng = _mk_engine(cfg, params, alpha=6.0)
+    eng.submit(ServeRequest(0, [3], max_new_tokens=4))
+    eng.step()
+    assert eng.scheduler.tlp == 1
+    eng.set_spec_len(8)
+    assert eng.scheduler.tlp == 8
+    assert eng.scheduler.fc_assignment == "pu"   # 1*8 > 6
+
+
+def test_pim_variant_runs_real_fc_gemv(small_model):
+    """Force the pim path (interpret mode): the engine's decode must route
+    FC projections through the Pallas kernel and still match the pu path."""
+    cfg, params = small_model
+    prompt = [3, 5, 7, 11]
+
+    def run(alpha):
+        eng = _mk_engine(cfg, params, alpha=alpha, pim_interpret=True)
+        eng.submit(ServeRequest(0, prompt, max_new_tokens=3))
+        return eng.run(max_iterations=20)[0].tokens
+
+    pu_tokens = run(alpha=0.0)    # AI=1 > 0  -> pu every iteration
+    pim_tokens = run(alpha=99.0)  # AI=1 < 99 -> pim every iteration
+    assert pu_tokens == pim_tokens

@@ -1,0 +1,97 @@
+"""Sharding-rule logic tests (pure logic — no multi-device runtime needed)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+class FakeMesh:
+    """Shape-only stand-in for jax.sharding.Mesh (divisibility checks)."""
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh(data=16, model=16)
+POD = FakeMesh(pod=2, data=16, model=16)
+
+
+class TestFilterSpec:
+    def test_divisible_kept(self):
+        spec = shd.filter_spec_for_shape(P("data", "model"), (32, 64), MESH)
+        assert tuple(spec) == ("data", "model")
+
+    def test_indivisible_dropped(self):
+        # qwen2's 14 heads can't shard over model=16
+        spec = shd.filter_spec_for_shape(P(None, "model"), (8, 14), MESH)
+        assert tuple(spec) == (None, None)
+
+    def test_duplicate_axis_first_wins(self):
+        # logits under SP: seq and vocab both -> model; first dim keeps it
+        spec = shd.filter_spec_for_shape(
+            P("data", "model", "model"), (32, 64, 128), MESH)
+        assert tuple(spec) == ("data", "model", None)
+
+    def test_tuple_axes(self):
+        spec = shd.filter_spec_for_shape(
+            P(("pod", "data"), "model"), (64, 32), POD)
+        assert tuple(spec) == (("pod", "data"), "model")
+
+    def test_tuple_axes_conflict(self):
+        spec = shd.filter_spec_for_shape(
+            P(("pod", "data"), "data"), (64, 32), POD)
+        assert tuple(spec) == (("pod", "data"), None)
+
+    @given(st.lists(st.integers(1, 512), min_size=1, max_size=4))
+    @settings(max_examples=100, deadline=None)
+    def test_property_result_always_divides(self, shape):
+        spec = shd.filter_spec_for_shape(
+            P(*(["model"] * len(shape))), tuple(shape), MESH)
+        for dim, entry in zip(shape, tuple(spec)):
+            if entry is not None:
+                assert dim % MESH.shape[entry] == 0
+
+    @given(st.lists(st.sampled_from(["data", "model", None]),
+                    min_size=1, max_size=5))
+    @settings(max_examples=100, deadline=None)
+    def test_property_no_duplicate_axes(self, entries):
+        spec = shd.filter_spec_for_shape(
+            P(*entries), tuple([256] * len(entries)), MESH)
+        used = [e for e in tuple(spec) if e is not None]
+        assert len(used) == len(set(used))
+
+
+class TestAxisRules:
+    def test_noop_outside_context(self):
+        x = jax.numpy.ones((4, 4))
+        assert shd.shard(x, "batch", "seq") is x
+
+    def test_rules_resolve(self):
+        with shd.axis_rules({"batch": "data", "seq": "model"}):
+            spec = shd.logical_to_spec(("batch", "seq", None))
+        assert tuple(spec) == ("data", "model", None)
+
+    def test_rule_tables_cover_model_logical_names(self):
+        """Every logical name the models emit must resolve in both tables."""
+        from repro.models import cache_logical_axes, param_logical_axes
+        from repro.configs import ASSIGNED
+        names = set()
+        for cfg in ASSIGNED:
+            for t in (param_logical_axes(cfg),):
+                for leaf in jax.tree.leaves(
+                        t, is_leaf=lambda x: isinstance(x, tuple)):
+                    names.update(a for a in leaf if isinstance(a, str))
+            if cfg.has_decode_step:
+                for leaf in jax.tree.leaves(
+                        cache_logical_axes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple)):
+                    names.update(a for a in leaf if isinstance(a, str))
+        for table in (shd.train_rules(), shd.serve_rules(),
+                      shd.train_rules(multi_pod=True),
+                      shd.serve_rules(multi_pod=True, long_context=True)):
+            missing = {n for n in names if n != "scan" and n not in table}
+            assert not missing, missing
