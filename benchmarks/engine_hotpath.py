@@ -1,0 +1,130 @@
+"""Engine hot-path microbenchmark: per-iteration wall time and host-device
+transfer counts, device-resident (fused) vs the seed's host-looped reference.
+
+Measures what PR 1 changed:
+  * plain decode  — fused argmax-on-device vs eager greedy + fetch;
+  * speculative   — one jitted scan (draft k steps + verify + accept +
+    rewind, ONE fetch) vs k per-step fetches + a verify fetch + a per-slot
+    Python accept loop.
+
+Transfers are counted by the engine itself: every device->host sync goes
+through `PapiEngine._fetch` (see engine.py docstring), so the numbers are
+actual round-trip counts, not estimates.  Wall times are medians over
+post-warmup iterations with `jax.block_until_ready` semantics implied by the
+fetch in every iteration.
+
+Writes BENCH_engine.json next to the repo root so the perf trajectory is
+tracked from this PR onward.
+
+Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+
+import jax
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.models import init_params                      # noqa: E402
+from repro.serving import PapiEngine, ServeRequest        # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
+               n_requests: int = 6, max_new: int = 20):
+    draft = (cfg, draft_params) if spec_len > 1 else None
+    eng = PapiEngine(
+        cfg, params,
+        max_slots=4, cache_capacity=64, prefill_len=8,
+        alpha=6.0, eos_token=1, spec_len=spec_len, draft=draft,
+        fused=fused,
+    )
+    for i in range(n_requests):
+        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=max_new))
+    eng.run(max_iterations=400)
+
+    # decode-only iterations after compile warmup (first 2 iterations carry
+    # trace+compile time; admission iterations carry the prefill fetch)
+    decode_iters = [s for s in eng.stats[2:] if s.new_tokens > 0]
+    if not decode_iters:
+        decode_iters = [s for s in eng.stats if s.new_tokens > 0]
+    walls = [s.wall_s for s in decode_iters]
+    transfers = [s.transfers for s in decode_iters]
+    return {
+        "fused": fused,
+        "spec_len": spec_len,
+        "iterations": len(eng.stats),
+        "decode_iterations_measured": len(decode_iters),
+        "wall_s_per_iter_median": statistics.median(walls),
+        "wall_s_per_iter_mean": statistics.fmean(walls),
+        "transfers_per_iter_mean": statistics.fmean(transfers),
+        "transfers_per_iter_max": max(transfers),
+        "total_host_transfers": eng.host_transfers,
+        "mean_accepted": statistics.fmean(
+            s.accepted for s in decode_iters) if decode_iters else 0.0,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-len", type=int, default=4)
+    ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    draft_params = init_params(cfg, jax.random.PRNGKey(9))
+
+    results = {
+        "backend": jax.default_backend(),
+        "model": cfg.name,
+        "plain": {
+            "fused": run_engine(cfg, params, draft_params,
+                                fused=True, spec_len=1),
+            "legacy": run_engine(cfg, params, draft_params,
+                                 fused=False, spec_len=1),
+        },
+        "speculative": {
+            "fused": run_engine(cfg, params, draft_params,
+                                fused=True, spec_len=args.spec_len),
+            "legacy": run_engine(cfg, params, draft_params,
+                                 fused=False, spec_len=args.spec_len),
+        },
+    }
+    spec_f = results["speculative"]["fused"]
+    spec_l = results["speculative"]["legacy"]
+    results["summary"] = {
+        "spec_transfer_reduction":
+            spec_l["transfers_per_iter_mean"] / spec_f["transfers_per_iter_mean"],
+        "spec_wall_speedup":
+            spec_l["wall_s_per_iter_median"] / spec_f["wall_s_per_iter_median"],
+        "plain_transfer_reduction":
+            results["plain"]["legacy"]["transfers_per_iter_mean"]
+            / results["plain"]["fused"]["transfers_per_iter_mean"],
+    }
+
+    Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
+    s = results["summary"]
+    print(f"spec_len={args.spec_len}: "
+          f"transfers/iter {spec_l['transfers_per_iter_mean']:.2f} -> "
+          f"{spec_f['transfers_per_iter_mean']:.2f} "
+          f"({s['spec_transfer_reduction']:.1f}x reduction), "
+          f"wall/iter {spec_l['wall_s_per_iter_median']*1e3:.1f}ms -> "
+          f"{spec_f['wall_s_per_iter_median']*1e3:.1f}ms "
+          f"({s['spec_wall_speedup']:.2f}x)")
+    print(f"wrote {args.out}")
+    ok = s["spec_transfer_reduction"] >= 2.0
+    if not ok:
+        print("WARNING: transfer reduction below the 2x acceptance bar")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

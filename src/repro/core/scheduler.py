@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core.ai import effective_parallelism
 
@@ -85,7 +87,12 @@ class PapiScheduler:
         finished = sum(1 for t in output_tokens if t == self.eos_token)
         return self.observe_counts(finished, admitted)
 
-    def observe_counts(self, finished: int, admitted: int = 0) -> str:
+    def observe_counts(self, finished, admitted: int = 0) -> str:
+        """`finished` may be a plain int, a numpy scalar, or an array of
+        per-slot finish counts/flags (the fused engine hands the device
+        bundle straight over) — arrays are summed here."""
+        finished = int(np.sum(finished))
+        admitted = int(np.sum(admitted))
         self.iteration += 1
         self.rlp = max(self.rlp - finished + admitted, 0)
         new = self._decide()

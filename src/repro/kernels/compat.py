@@ -1,0 +1,17 @@
+"""Version-portability helpers for the Pallas TPU kernels.
+
+`pltpu.TPUCompilerParams` was renamed `pltpu.CompilerParams` across jax
+releases; the kernels target both so the repo runs on whatever toolchain the
+host bakes in.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct compiler params under either pltpu API name."""
+    return _CompilerParams(**kwargs)

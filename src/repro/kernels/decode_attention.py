@@ -12,7 +12,29 @@ softmax state held in VMEM:
   scratch:     acc [g, hd] f32, m/l [g, 128] f32 running softmax state
 
 Masking uses per-request cache lengths (continuous batching => ragged),
-delivered via scalar-prefetch-style SMEM block.
+delivered via scalar prefetch (`PrefetchScalarGridSpec`) so they are
+available *before* each grid step's DMA is issued.
+
+Ragged block skipping
+---------------------
+A continuous batch is ragged: slot A may hold 2000 cached tokens while slot
+B holds 40, yet the grid runs `capacity // block_k` KV steps for both.  With
+``block_skip=True`` (default) two things happen for blocks entirely past a
+request's cache length:
+
+  * the K/V `index_map` clamps the block index to the request's last valid
+    block — consecutive grid steps then fetch the *same* block, which the
+    Pallas pipeline recognizes and elides the redundant HBM->VMEM DMA;
+  * the kernel body wraps the whole score/softmax/accumulate computation in
+    a `pl.when(kb * block_k < length)` no-op, so fully-masked tiles spend
+    neither MXU nor VPU cycles.
+
+Numerics are bit-identical with skipping on or off for any `lens >= 1`
+batch (tested): a fully-masked tile contributes p = exp(NEG_INF - m) = +0.0
+and alpha = 1.0 exactly, i.e. nothing.  (For the degenerate lens == 0 the
+skipped kernel returns zeros while the unskipped one would emit a uniform
+average over garbage — the engine never produces lens < 1, it parks idle
+slots at pos = 1.)
 """
 from __future__ import annotations
 
@@ -24,11 +46,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
 def _kernel(
-    lens_ref,      # SMEM [1, 1] int32 — this request's cache length
+    lens_ref,      # SMEM [b] int32 — scalar-prefetched per-request lengths
     q_ref,         # [1, 1, g, hd]
     k_ref,         # [1, block_k, 1, hd]
     v_ref,         # [1, block_k, 1, hd]
@@ -39,8 +63,11 @@ def _kernel(
     *,
     block_k: int,
     num_kb: int,
+    block_skip: bool,
 ):
+    i = pl.program_id(0)
     kb = pl.program_id(2)
+    length = lens_ref[i]
 
     @pl.when(kb == 0)
     def _init():
@@ -48,34 +75,41 @@ def _kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0]                                   # [g, hd]
-    k = k_ref[0, :, 0]                                # [block_k, hd]
-    v = v_ref[0, :, 0]                                # [block_k, hd]
-    scale = 1.0 / math.sqrt(q.shape[-1])
+    def _compute():
+        q = q_ref[0, 0]                                   # [g, hd]
+        k = k_ref[0, :, 0]                                # [block_k, hd]
+        v = v_ref[0, :, 0]                                # [block_k, hd]
+        scale = 1.0 / math.sqrt(q.shape[-1])
 
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ) * scale                                         # [g, block_k]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                         # [g, block_k]
 
-    length = lens_ref[0, 0]
-    kv_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(kv_pos < length, s, NEG_INF)
+        kv_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < length, s, NEG_INF)
 
-    m_prev = m_ref[:, 0:1]                            # [g, 1]
-    m_cur = jnp.max(s, axis=-1, keepdims=True)        # [g, 1]
-    m_new = jnp.maximum(m_prev, m_cur)
-    p = jnp.exp(s - m_new)                            # [g, block_k]
-    alpha = jnp.exp(m_prev - m_new)                   # [g, 1]
+        m_prev = m_ref[:, 0:1]                            # [g, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)        # [g, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # [g, block_k]
+        alpha = jnp.exp(m_prev - m_new)                   # [g, 1]
 
-    l_new = l_ref[:, 0:1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                 # [g, hd]
-    acc_ref[...] = acc_ref[...] * alpha + pv
-    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        l_new = l_ref[:, 0:1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                 # [g, hd]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    if block_skip:
+        # fully-masked tile => no-op (the DMA was already elided by the
+        # clamped index_map; this skips the compute as well)
+        pl.when(kb * block_k < length)(_compute)
+    else:
+        _compute()
 
     @pl.when(kb == num_kb - 1)
     def _finalize():
@@ -83,7 +117,8 @@ def _kernel(
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "interpret", "block_skip"))
 def decode_attention(
     q: jax.Array,          # [b, nkv, g, hd]
     k_cache: jax.Array,    # [b, S, nkv, hd]
@@ -92,6 +127,7 @@ def decode_attention(
     *,
     block_k: int = 512,
     interpret: bool | None = None,
+    block_skip: bool = True,
 ) -> jax.Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -100,30 +136,44 @@ def decode_attention(
     block_k = min(block_k, skv)
     assert skv % block_k == 0, (skv, block_k)
     num_kb = skv // block_k
-    lens2 = lens.astype(jnp.int32).reshape(b, 1)
+    lens1 = lens.astype(jnp.int32).reshape(b)
+
+    def q_index(i, j, kb, lens_ref):
+        return (i, j, 0, 0)
+
+    def kv_index(i, j, kb, lens_ref):
+        if not block_skip:
+            return (i, kb, j, 0)
+        # clamp to the request's last valid block: repeated indices make the
+        # pipeline skip the redundant fetch for fully-masked tiles
+        last = jnp.maximum(pl.cdiv(lens_ref[i], block_k) - 1, 0)
+        return (i, jnp.minimum(kb, last), j, 0)
 
     grid = (b, nkv, num_kb)
-    kernel = functools.partial(_kernel, block_k=block_k, num_kb=num_kb)
-    return pl.pallas_call(
-        kernel,
+    kernel = functools.partial(_kernel, block_k=block_k, num_kb=num_kb,
+                               block_skip=block_skip)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, kb: (i, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, hd), lambda i, j, kb: (i, j, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, hd), lambda i, j, kb: (i, kb, j, 0)),
-            pl.BlockSpec((1, block_k, 1, hd), lambda i, j, kb: (i, kb, j, 0)),
+            pl.BlockSpec((1, 1, g, hd), q_index),
+            pl.BlockSpec((1, block_k, 1, hd), kv_index),
+            pl.BlockSpec((1, block_k, 1, hd), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, kb: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, g, hd), q_index),
         scratch_shapes=[
             pltpu.VMEM((g, hd), jnp.float32),
             pltpu.VMEM((g, 128), jnp.float32),
             pltpu.VMEM((g, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
         name="papi_decode_attention",
-    )(lens2, q, k_cache, v_cache)
+    )(lens1, q, k_cache, v_cache)

@@ -11,6 +11,13 @@ block pinned in VMEM for the whole kernel:
   w block: [block_k, block_n] streamed once
   acc:     [m, block_n] f32 scratch
 
+Block tuning: unless the caller pins block sizes, `_auto_blocks` picks the
+largest divisors of (K, N) whose *double-buffered* working set fits a
+conservative VMEM budget — the pipeline overlaps the next weight tile's DMA
+with the current tile's FLOPs, so both buffers must be resident at once.
+Bigger tiles amortize grid/DMA overhead; the budget keeps two w-tiles, two
+x-tiles, the f32 accumulator and the output block co-resident.
+
 When RLP*TLP is large the MXU path (plain jnp.dot / XLA) wins — that flip is
 exactly PAPI's scheduling decision, made by `core.scheduler` and validated by
 `core.calibration` on this very pair of implementations.
@@ -23,6 +30,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
+
+# Conservative per-core VMEM budget for the kernel's working set (real VMEM
+# is ~16 MiB; leave headroom for the pipeline's own bookkeeping).
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _largest_divisor(dim: int, target: int) -> int:
+    """Largest divisor of dim that is <= target."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _working_set_bytes(m: int, bk: int, bn: int, itemsize: int) -> int:
+    # 2x for double buffering of the streamed/pinned input tiles; the f32
+    # accumulator and output tile are single-buffered.
+    return (2 * bk * bn * itemsize        # w tiles (streamed)
+            + 2 * m * bk * itemsize       # x tiles (pinned, revolving)
+            + m * bn * 4                  # acc scratch (f32)
+            + m * bn * itemsize)          # output tile
+
+
+def _auto_blocks(m: int, K: int, N: int, itemsize: int) -> tuple[int, int]:
+    """Pick (block_k, block_n) fitting the double-buffered VMEM budget."""
+    for target in (1024, 768, 512, 384, 256, 128, 64, 32, 16, 8):
+        bk = _largest_divisor(K, target)
+        bn = _largest_divisor(N, target)
+        if _working_set_bytes(m, bk, bn, itemsize) <= _VMEM_BUDGET_BYTES:
+            return bk, bn
+    return _largest_divisor(K, 8), _largest_divisor(N, 8)
 
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, num_kb: int):
@@ -47,8 +87,8 @@ def fc_gemv(
     x: jax.Array,      # [m, K]  (m = RLP*TLP, small)
     w: jax.Array,      # [K, N]
     *,
-    block_k: int = 512,
-    block_n: int = 512,
+    block_k: int | None = None,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     if interpret is None:
@@ -56,8 +96,9 @@ def fc_gemv(
     m, K = x.shape
     K2, N = w.shape
     assert K == K2
-    block_k = min(block_k, K)
-    block_n = min(block_n, N)
+    auto_k, auto_n = _auto_blocks(m, K, N, x.dtype.itemsize)
+    block_k = auto_k if block_k is None else min(block_k, K)
+    block_n = auto_n if block_n is None else min(block_n, N)
     assert K % block_k == 0 and N % block_n == 0, (K, N, block_k, block_n)
     num_kb = K // block_k
 
@@ -73,7 +114,10 @@ def fc_gemv(
         out_specs=pl.BlockSpec((m, block_n), lambda n, k: (0, n)),
         out_shape=jax.ShapeDtypeStruct((m, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
+            # n parallel, k sequential: the k accumulation must stay ordered,
+            # the n tiles are independent so the pipeline can double-buffer
+            # the weight stream across both axes.
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

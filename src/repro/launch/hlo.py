@@ -84,12 +84,16 @@ def _dot_flops(line: str, shapes: dict[str, list[int]]) -> float:
     if out is None:
         return 0.0
     out_elems = out[0]
-    # post-optimization HLO prints operands as bare names: resolve the lhs
-    # shape through the per-computation shape table.
-    m = re.search(r"dot\(%?([\w\.\-]+)", line)
+    # The lhs operand is printed either as a typed literal
+    # (`dot(f32[8,16]{1,0} %arg, ...)`) or as a bare name (`dot(%arg, ...)`)
+    # depending on the XLA version/backend; accept both.
+    m = re.search(r"dot\(\s*(?:(\w+)\[([\d,]*)\]\S*\s+)?%?([\w\.\-]+)", line)
     if not m:
         return 0.0
-    lhs_dims = shapes.get(m.group(1))
+    if m.group(1) is not None and m.group(1) in _DTYPE_BYTES:
+        lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    else:
+        lhs_dims = shapes.get(m.group(3))
     if lhs_dims is None:
         return 0.0
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)

@@ -8,6 +8,7 @@ from repro.models.model import (
     param_logical_axes,
     param_shapes,
     prefill,
+    prefill_to_slots,
 )
 
 __all__ = [
@@ -20,4 +21,5 @@ __all__ = [
     "param_logical_axes",
     "param_shapes",
     "prefill",
+    "prefill_to_slots",
 ]

@@ -28,6 +28,10 @@ def current_fc_variant() -> str:
     return getattr(_state, "variant", "pu")
 
 
+def current_fc_interpret() -> bool | None:
+    return getattr(_state, "interpret", None)
+
+
 @contextlib.contextmanager
 def fc_variant(variant: str, interpret: bool | None = None):
     assert variant in ("pu", "pim"), variant
@@ -42,16 +46,11 @@ def fc_variant(variant: str, interpret: bool | None = None):
         _state.interpret = prev_i
 
 
-def _block(dim: int, target: int = 512) -> int:
-    """Largest divisor of dim that is <= target (Pallas block size)."""
-    b = min(dim, target)
-    while dim % b:
-        b -= 1
-    return b
-
-
 def papi_linear(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x: [..., K] @ w: [K, N] through the scheduled FC path."""
+    """x: [..., K] @ w: [K, N] through the scheduled FC path.
+
+    Block sizes are left to `fc_gemv`'s auto-tuner, which sizes the tiles to
+    the double-buffered VMEM budget instead of a fixed 512."""
     if current_fc_variant() == "pim":
         from repro.kernels.fc_gemv import fc_gemv
         lead = x.shape[:-1]
@@ -61,7 +60,6 @@ def papi_linear(x: jax.Array, w: jax.Array) -> jax.Array:
             m *= d
         out = fc_gemv(
             x.reshape(m, k), w,
-            block_k=_block(k), block_n=_block(n),
             interpret=getattr(_state, "interpret", None),
         )
         return out.reshape(*lead, n)

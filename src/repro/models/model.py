@@ -606,6 +606,58 @@ def prefill(cfg, params, batch, cache):
     return logits[:, 0], cache
 
 
+def prefill_to_slots(cfg, params, batch, cache, src):
+    """Batched admission: prefill a fixed-shape batch of new requests and
+    merge each into its assigned slot of the engine cache — one compiled call
+    regardless of how many slots are admitted this iteration.
+
+    batch:  {"tokens": [n, P] int32, "prompt_lens": [n] int32} — rows past
+            the number of actually-admitted requests are padding (their
+            results are simply never merged).
+    cache:  the engine's slot cache, batch dim = max_slots.
+    src:    [max_slots] int32 — src[s] = the prefill-batch row admitted into
+            slot s, or -1 to leave slot s untouched.  Fixed shape, so the
+            call never recompiles as the admitted set varies.
+
+    Returns (first_tokens [max_slots] int32, cache): first_tokens[s] is the
+    greedy first output token for slots with src[s] >= 0 (garbage elsewhere).
+    """
+    n, p_len = batch["tokens"].shape
+    # The temp cache only ever holds the prompt's KV, so size it to the
+    # prefill window — NOT the slot capacity (which would double peak KV
+    # memory for large-capacity engines).  Stale slot KV past the prompt is
+    # masked out by decode's cache_len anyway.
+    if "k" in cache:
+        p_len = min(p_len, cache["k"].shape[2])
+    tmp = init_cache(cfg, n, p_len)
+    logits, tmp = prefill(cfg, params, batch, tmp)
+
+    take = jnp.clip(src, 0)                       # [slots] row gather index
+    keep = src < 0                                # [slots] untouched slots
+
+    def merge(old, new):
+        # old: [L, slots, ...], new: [L, n, ...] — gather-by-slot then select
+        gathered = jnp.take(new, take, axis=1)
+        mask = keep.reshape((1, -1) + (1,) * (old.ndim - 2))
+        return jnp.where(mask, old, gathered)
+
+    def merge_head(old, new):
+        # KV merge over the first p_len sequence positions only
+        head = merge(old[:, :, :p_len], new)
+        return old.at[:, :, :p_len].set(head)
+
+    cache = dict(cache)
+    for key in ("k", "v"):
+        if key in cache:
+            cache[key] = merge_head(cache[key], tmp[key])
+    if "ssm" in cache:
+        cache["ssm"] = jax.tree.map(merge, cache["ssm"], tmp["ssm"])
+    cache["pos"] = jnp.where(keep, cache["pos"], jnp.take(tmp["pos"], take))
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [n]
+    first_slots = jnp.where(keep, -1, jnp.take(first, take))
+    return first_slots, cache
+
+
 def decode_step(cfg, params, cache, tokens, positions=None):
     """tokens [b, t] -> (logits [b, t, V], new cache).  t = TLP (1 for the
     dry-run serve_step; >1 verifies a speculative window)."""

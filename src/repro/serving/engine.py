@@ -16,6 +16,46 @@ The runtime loop the paper describes (§5.2.2), realized over the JAX models:
 Slots are fixed-capacity (static shapes: the decode step is compiled once
 per TLP value).  Inactive slots decode garbage that is masked out — the
 standard padded-batch serving trade.
+
+Device-resident hot path
+------------------------
+PAPI's premise is that the per-iteration scheduling decision is O(1) and a
+reschedule costs nothing but the dispatch — which only holds if the Python
+orchestration around the decode step is free.  The default (``fused=True``)
+hot path therefore keeps one engine iteration (nearly) a single device
+program:
+
+  * the k-step draft loop + target verify + accept-longest-prefix +
+    cache-rewind run inside ONE jitted function (`jax.lax.scan` over the
+    draft steps, vectorized accept via `sampler.accept_speculative`), and
+    the host fetches one `(out, accepted, finished_eos)` bundle per
+    iteration instead of k+1 per-step syncs;
+  * admission prefils ALL newly-freed slots in one compiled
+    `models.prefill_to_slots` call (fixed [max_slots, prefill_len] batch +
+    a [max_slots] src map), replacing the per-request temp-cache
+    allocation + per-key `.at[slot].set` scatter;
+  * inactive slots are parked with a fixed-shape boolean mask
+    (`jnp.where(mask, 1, pos)`) instead of the recompile-prone dynamic
+    `jnp.asarray(inactive)` gather index.
+
+``fused=False`` preserves the seed's per-draft-step host loop and per-slot
+Python accept reference — kept as the oracle for the property tests and the
+`benchmarks/engine_hotpath.py` A/B.
+
+Compiled-function cache keys
+----------------------------
+All jitted entry points are cached on ``(kind, tlp, fc_variant,
+pim_interpret)``.  The FC variant MUST be part of the key: `papi_linear`
+reads the variant from a host thread-local at *trace* time, so a cache
+keyed only on (kind, tlp) — as the seed did — would bake in whichever
+variant was active at first call and silently ignore every later scheduler
+flip.  With the variant in the key, each path traces at most twice (pu +
+pim) and a reschedule really is just a dispatch of the other executable.
+
+Host-transfer accounting: every device->host sync goes through
+`PapiEngine._fetch`, which bumps ``host_transfers``; per-iteration deltas
+are recorded in `IterStats.transfers` so the benchmark can count round
+trips instead of guessing.
 """
 from __future__ import annotations
 
@@ -30,9 +70,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import PapiScheduler
-from repro.models import decode_step, init_cache, prefill
-from repro.models.linear import fc_variant
-from repro.serving.sampler import greedy
+from repro.models import decode_step, init_cache, prefill_to_slots
+from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
+from repro.serving.sampler import accept_speculative, greedy
 
 
 @dataclasses.dataclass
@@ -61,6 +101,7 @@ class IterStats:
     new_tokens: int
     accepted: float        # mean accepted tokens per active slot (spec dec)
     wall_s: float
+    transfers: int = 0     # device->host sync round-trips this iteration
 
 
 class PapiEngine:
@@ -80,6 +121,7 @@ class PapiEngine:
         draft: tuple[ModelConfig, Any] | None = None,
         eos_token: int = 2,
         pim_interpret: bool | None = None,
+        fused: bool = True,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
         self.cfg, self.params = cfg, params
@@ -89,6 +131,7 @@ class PapiEngine:
         self.eos_token = eos_token
         self.spec_len = spec_len
         self.pim_interpret = pim_interpret
+        self.fused = fused
         self.scheduler = PapiScheduler(cfg, alpha=alpha, tlp=spec_len,
                                        eos_token=eos_token)
         self.scheduler.initial_schedule(0, spec_len)
@@ -102,6 +145,7 @@ class PapiEngine:
         self.results: list[ServeResult] = []
         self.stats: list[IterStats] = []
         self.iteration = 0
+        self.host_transfers = 0
 
         if draft is not None:
             self.draft_cfg, self.draft_params = draft
@@ -110,8 +154,10 @@ class PapiEngine:
         else:
             self.draft_cfg = self.draft_params = self.draft_cache = None
 
-        self._decode_jit: dict[tuple[str, int], Any] = {}
-        self._prefill_jit: dict[str, Any] = {}
+        # jit caches, keyed (kind, tlp, fc_variant, interpret) — see module
+        # docstring for why the variant must be in the key.
+        self._decode_jit: dict[tuple, Any] = {}
+        self._prefill_jit: dict[tuple, Any] = {}
 
     # ------------------------------------------------------------------ API
     def submit(self, req: ServeRequest) -> None:
@@ -127,97 +173,208 @@ class PapiEngine:
         return self.results
 
     # ------------------------------------------------------------- internals
+    def _fetch(self, *arrays):
+        """Single device->host sync round-trip (counted)."""
+        self.host_transfers += 1
+        got = jax.device_get(arrays)
+        return got[0] if len(arrays) == 1 else got
+
+    def _jit_key(self, kind: str, tlp: int) -> tuple:
+        return (kind, tlp, self.scheduler.fc_assignment, self.pim_interpret)
+
     def _get_decode(self, which: str):
+        """Legacy (unfused) per-call decode step."""
         tlp = 1 if which == "draft" else (self.spec_len if which == "verify" else 1)
-        key = (which, tlp)
+        key = self._jit_key(which, tlp)
         if key not in self._decode_jit:
             cfg = self.draft_cfg if which == "draft" else self.cfg
             fn = partial(decode_step, cfg)
             self._decode_jit[key] = jax.jit(fn)
         return self._decode_jit[key]
 
+    def _get_plain_fused(self):
+        """Fused plain decode: decode_step + greedy in one device program, so
+        the only host transfer is the [slots] token vector."""
+        key = self._jit_key("plain_fused", 1)
+        if key not in self._decode_jit:
+            cfg = self.cfg
+
+            def plain_step(params, cache, last):
+                logits, cache = decode_step(cfg, params, cache, last[:, None])
+                return greedy(logits[:, -1]), cache
+
+            self._decode_jit[key] = jax.jit(plain_step)
+        return self._decode_jit[key]
+
+    def _get_spec_fused(self):
+        """Fused speculative iteration: the k-step draft loop is a
+        `jax.lax.scan`, the verify + accept-longest-prefix + cache rewind are
+        vectorized device computation, and the host fetches a single
+        (out, accepted, finished_eos) bundle."""
+        key = self._jit_key("spec_fused", self.spec_len)
+        if key not in self._decode_jit:
+            cfg, dcfg = self.cfg, self.draft_cfg
+            k, eos = self.spec_len, self.eos_token
+
+            def spec_step(params, draft_params, cache, draft_cache, last):
+                # 1) draft proposes autoregressively.  It runs k steps — the
+                # extra step writes KV for the window's final token, keeping
+                # the two caches in lockstep when the full window is accepted.
+                def draft_body(carry, _):
+                    dc, tok = carry
+                    logits, dc = decode_step(dcfg, draft_params, dc,
+                                             tok[:, None])
+                    nxt = greedy(logits[:, -1])
+                    return (dc, nxt), nxt
+
+                (draft_cache, _), props = jax.lax.scan(
+                    draft_body, (draft_cache, last), None, length=k)
+                # window rows: [last, props[0], ..., props[k-2]]  -> [slots, k]
+                window = jnp.concatenate([last[None], props[:-1]], axis=0).T
+
+                # 2) target verifies the window in ONE decode step (TLP = k)
+                logits, cache = decode_step(cfg, params, cache, window)
+                target = greedy(logits)                           # [slots, k]
+
+                # 3) accept longest matching prefix, rewind target cache to
+                # the accepted position, resync the draft cache to it
+                out, accepted = accept_speculative(window, target)
+                cache = dict(cache)
+                cache["pos"] = cache["pos"] - (k - accepted)
+                draft_cache = dict(draft_cache)
+                draft_cache["pos"] = jnp.minimum(draft_cache["pos"],
+                                                 cache["pos"])
+                in_window = jnp.arange(k)[None, :] < accepted[:, None]
+                finished_eos = jnp.any((out == eos) & in_window, axis=1)
+                return out, accepted, finished_eos, cache, draft_cache
+
+            self._decode_jit[key] = jax.jit(spec_step)
+        return self._decode_jit[key]
+
+    def _get_prefill(self, which: str):
+        cfg = self.draft_cfg if which == "draft" else self.cfg
+        # admission usually runs outside any fc_variant context ("pu"), but
+        # papi_linear reads the AMBIENT variant at trace time — key on it so
+        # a caller-wrapped engine never reuses a stale executable
+        key = (which, current_fc_variant(), current_fc_interpret())
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = jax.jit(partial(prefill_to_slots, cfg))
+        return self._prefill_jit[key]
+
     def _admit(self) -> int:
-        """Mixed continuous batching: fill free slots from the queue."""
-        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        """Mixed continuous batching: fill free slots from the queue, one
+        compiled `prefill_to_slots` call per admission wave (fixed-shape
+        batch padded to max_slots, so the call compiles exactly once).  A
+        request that finishes instantly at admission (first token is <eos>,
+        or a 1-token budget) frees its slot for the NEXT wave, so the queue
+        keeps draining within this step exactly like the seed's slot-reuse
+        loop did."""
         admitted = 0
+        while True:
+            wave_admitted, instant_finish = self._admit_wave()
+            admitted += wave_admitted
+            if not (instant_finish and self.queue):
+                return admitted
+
+    def _admit_wave(self) -> tuple[int, bool]:
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        batch_rows: list[tuple[int, ServeRequest]] = []
         while self.queue and free:
-            slot = free.pop(0)
             req = self.queue.pop(0)
-            # never let a request outgrow its slot's KV capacity
-            budget = self.capacity - min(len(req.prompt), self.prefill_len)
-            req.max_new_tokens = min(req.max_new_tokens,
-                                     budget - max(self.spec_len, 1))
-            self._prefill_slot(slot, req)
-            if self.draft_cfg is not None:
-                self._prefill_slot(slot, req, draft=True)
-            # prefill already produced the first output token
-            first = int(self.slot_last[slot])
-            self.slot_tokens[slot] = [first]
-            if first == self.eos_token or req.max_new_tokens <= 1:
-                reason = "eos" if first == self.eos_token else "length"
+            p = min(len(req.prompt), self.prefill_len)
+            # never let a request outgrow its slot's KV capacity: the budget
+            # reserves a full speculative window past the last new token
+            budget = self.capacity - p - max(self.spec_len, 1)
+            if budget < 1:
+                # cannot emit even one token without overflowing the slot
                 self.results.append(ServeResult(
-                    req.req_id, [first], len(req.prompt), self.iteration,
+                    req.req_id, [], len(req.prompt), self.iteration,
+                    "rejected",
+                ))
+                continue
+            req.max_new_tokens = max(1, min(req.max_new_tokens, budget))
+            batch_rows.append((free.pop(0), req))
+        if not batch_rows:
+            return 0, False
+
+        tokens = np.zeros((self.max_slots, self.prefill_len), np.int32)
+        lens = np.ones(self.max_slots, np.int32)
+        src = np.full(self.max_slots, -1, np.int32)
+        for row, (slot, req) in enumerate(batch_rows):
+            p = min(len(req.prompt), self.prefill_len)
+            tokens[row, :p] = req.prompt[-self.prefill_len:][:p]
+            lens[row] = p
+            src[slot] = row
+        batch = {"tokens": jnp.asarray(tokens),
+                 "prompt_lens": jnp.asarray(lens)}
+        src_dev = jnp.asarray(src)
+        first, self.cache = self._get_prefill("main")(
+            self.params, batch, self.cache, src_dev)
+        if self.draft_cfg is not None:
+            _, self.draft_cache = self._get_prefill("draft")(
+                self.draft_params, batch, self.draft_cache, src_dev)
+        first_h = self._fetch(first)
+
+        admitted = 0
+        instant_finish = False
+        for slot, req in batch_rows:
+            tok = int(first_h[slot])
+            self.slot_tokens[slot] = [tok]
+            self.slot_last[slot] = tok
+            # prefill already produced the first output token
+            if tok == self.eos_token or req.max_new_tokens <= 1:
+                reason = "eos" if tok == self.eos_token else "length"
+                self.results.append(ServeResult(
+                    req.req_id, [tok], len(req.prompt), self.iteration,
                     reason,
                 ))
-                free.insert(0, slot)     # slot stays available
+                self.slot_last[slot] = 0   # slot stays available
+                instant_finish = True
             else:
                 self.slot_req[slot] = req
-                admitted += 1            # counts toward RLP
-        return admitted
+                admitted += 1              # counts toward RLP
+        return admitted, instant_finish
 
-    def _prefill_slot(self, slot: int, req: ServeRequest,
-                      draft: bool = False) -> None:
-        cfg = self.draft_cfg if draft else self.cfg
-        params = self.draft_params if draft else self.params
-        cache = self.draft_cache if draft else self.cache
-        p = min(len(req.prompt), self.prefill_len)
-        toks = np.zeros((1, self.prefill_len), np.int32)
-        toks[0, :p] = req.prompt[-self.prefill_len:][:p]
-        batch = {
-            "tokens": jnp.asarray(toks),
-            "prompt_lens": jnp.asarray([p], jnp.int32),
-        }
-        tmp_cache = init_cache(cfg, 1, self.capacity)
-        key = "draft" if draft else "main"
-        if key not in self._prefill_jit:
-            self._prefill_jit[key] = jax.jit(partial(prefill, cfg))
-        logits, tmp_cache = self._prefill_jit[key](params, batch, tmp_cache)
-        # scatter the single-request cache into the slot
-        for k in ("k", "v"):
-            if k in cache:
-                cache[k] = cache[k].at[:, slot].set(tmp_cache[k][:, 0])
-        if "ssm" in cache:
-            cache["ssm"] = jax.tree.map(
-                lambda d, s: d.at[:, slot].set(s[:, 0]), cache["ssm"],
-                tmp_cache["ssm"],
-            )
-        cache["pos"] = cache["pos"].at[slot].set(p)
-        if not draft:
-            self.slot_last[slot] = int(np.argmax(np.asarray(logits[0])))
-
-    def _decode_all(self) -> tuple[np.ndarray, np.ndarray]:
+    def _decode_all(self) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
         """One decoding iteration for all slots.  Returns (new token matrix
-        [slots, <=tlp], accepted counts [slots])."""
+        [slots, <=tlp], accepted counts [slots], eos-finished mask|None)."""
         variant = self.scheduler.fc_assignment
         tlp = self.spec_len
         with fc_variant(variant, interpret=self.pim_interpret):
             if tlp <= 1 or self.draft_cfg is None:
-                toks = jnp.asarray(self.slot_last[:, None])
-                logits, self.cache = self._get_decode("plain")(
-                    self.params, self.cache, toks
-                )
-                nxt = np.asarray(greedy(logits[:, -1]))
-                return nxt[:, None], np.ones(self.max_slots)
-            return self._speculative_iteration()
+                last = jnp.asarray(self.slot_last)
+                if self.fused:
+                    nxt, self.cache = self._get_plain_fused()(
+                        self.params, self.cache, last)
+                    nxt_h = self._fetch(nxt)
+                else:
+                    logits, self.cache = self._get_decode("plain")(
+                        self.params, self.cache, last[:, None])
+                    nxt_h = self._fetch(greedy(logits[:, -1]))
+                return (np.asarray(nxt_h)[:, None].astype(np.int32),
+                        np.ones(self.max_slots), None)
+            if self.fused:
+                return self._speculative_iteration_fused()
+            return self._speculative_iteration_host()
 
-    def _speculative_iteration(self) -> tuple[np.ndarray, np.ndarray]:
-        """Greedy draft-propose / target-verify (lossless)."""
+    def _speculative_iteration_fused(self):
+        """Device-resident draft/verify/accept: one transfer per iteration."""
+        fn = self._get_spec_fused()
+        out, accepted, fin, self.cache, self.draft_cache = fn(
+            self.params, self.draft_params, self.cache, self.draft_cache,
+            jnp.asarray(self.slot_last),
+        )
+        out_h, acc_h, fin_h = self._fetch(out, accepted, fin)
+        return (np.asarray(out_h), np.asarray(acc_h).astype(np.float64),
+                np.asarray(fin_h))
+
+    def _speculative_iteration_host(self):
+        """The seed's per-step host loop — the reference implementation the
+        fused path is validated against (and the benchmark's baseline)."""
         k = self.spec_len
         draft_fn = self._get_decode("draft")
-        # 1) draft proposes k-1 tokens autoregressively.  It runs k steps —
-        # the extra step writes KV for the window's final token, so the
-        # draft cache covers every token the target might accept (keeps the
-        # two caches in lockstep when the full window is accepted).
+        # 1) draft proposes k-1 tokens autoregressively (k steps: the extra
+        # step writes KV for the window's final token)
         proposals = [self.slot_last.copy()]
         last = jnp.asarray(self.slot_last[:, None])
         for _ in range(k):
@@ -225,7 +382,7 @@ class PapiEngine:
                 self.draft_params, self.draft_cache, last
             )
             nxt = greedy(logits[:, -1])
-            proposals.append(np.asarray(nxt))
+            proposals.append(np.asarray(self._fetch(nxt)))
             last = nxt[:, None]
         window = np.stack(proposals[:k], axis=1)          # [slots, k]
 
@@ -233,7 +390,7 @@ class PapiEngine:
         logits, self.cache = self._get_decode("verify")(
             self.params, self.cache, jnp.asarray(window)
         )
-        target = np.asarray(greedy(logits))               # [slots, k]
+        target = np.asarray(self._fetch(greedy(logits)))  # [slots, k]
 
         # 3) accept longest matching prefix; roll back caches per slot
         accepted = np.zeros(self.max_slots, np.int64)
@@ -252,25 +409,29 @@ class PapiEngine:
             self.draft_cache["pos"] = jnp.minimum(
                 self.draft_cache["pos"], self.cache["pos"]
             )
-        return out, accepted.astype(np.float64)
+        return out, accepted.astype(np.float64), None
 
     def step(self) -> None:
         t0 = time.perf_counter()
+        transfers0 = self.host_transfers
         admitted = self._admit()
         active = self.active_slots
         if not active:
             self.scheduler.observe_counts(0, admitted)
             return
 
-        out, accepted = self._decode_all()
+        # the eos flags in the bundle are a device-side convenience for
+        # callers (launch.serve); the host loop below re-derives finishes
+        # anyway since length-based finishes need per-request budgets
+        out, accepted, _fin = self._decode_all()
 
         # host-side bookkeeping: append tokens, detect eos / length
         iter_tokens: list[int] = []
-        finished = 0
+        finished_flags = np.zeros(self.max_slots, bool)
         for s in active:
             req = self.slot_req[s]
             assert req is not None
-            n_acc = int(accepted[s]) if accepted is not None else 1
+            n_acc = int(accepted[s])
             for j in range(n_acc):
                 tok = int(out[s, j])
                 self.slot_tokens[s].append(tok)
@@ -284,7 +445,7 @@ class PapiEngine:
                         self.iteration, reason,
                     ))
                     self.slot_req[s] = None
-                    finished += 1
+                    finished_flags[s] = True
                     break
             else:
                 self.slot_last[s] = self.slot_tokens[s][-1]
@@ -293,16 +454,21 @@ class PapiEngine:
             self.slot_last[s] = 0
 
         # park inactive slots at pos=1 so their garbage decode can't creep
-        # past the cache capacity (they are masked from outputs anyway)
-        inactive = [i for i in range(self.max_slots) if self.slot_req[i] is None]
-        if inactive:
-            idx = jnp.asarray(inactive)
-            self.cache["pos"] = self.cache["pos"].at[idx].set(1)
+        # past the cache capacity (they are masked from outputs anyway).
+        # Fixed-shape [max_slots] mask: the same compiled where() serves any
+        # inactive set, unlike a dynamic gather index which retraces per set.
+        inactive = np.array([r is None for r in self.slot_req])
+        if inactive.any():
+            mask = jnp.asarray(inactive)
+            one = jnp.ones((), jnp.int32)
+            self.cache["pos"] = jnp.where(mask, one, self.cache["pos"])
             if self.draft_cache is not None:
-                self.draft_cache["pos"] = self.draft_cache["pos"].at[idx].set(1)
+                self.draft_cache["pos"] = jnp.where(
+                    mask, one, self.draft_cache["pos"])
 
-        # 4) the PAPI runtime scheduling step (§5.2.2)
-        self.scheduler.observe_counts(finished, admitted)
+        # 4) the PAPI runtime scheduling step (§5.2.2): the per-slot finished
+        # flags go to the scheduler as an array — it sums them itself.
+        self.scheduler.observe_counts(finished_flags, admitted)
         self.iteration += 1
         self.stats.append(IterStats(
             iteration=self.iteration,
@@ -313,6 +479,7 @@ class PapiEngine:
             new_tokens=len(iter_tokens),
             accepted=float(np.mean(accepted[active])) if len(active) else 0.0,
             wall_s=time.perf_counter() - t0,
+            transfers=self.host_transfers - transfers0,
         ))
 
     def set_spec_len(self, tlp: int) -> None:

@@ -1,4 +1,9 @@
-"""Token sampling for the serving engine."""
+"""Token sampling + speculative acceptance for the serving engine.
+
+`accept_speculative` is the device-side half of PAPI's lossless greedy
+speculation: it runs *inside* the engine's fused decode step so the
+accept-longest-prefix decision never leaves the accelerator.
+"""
 from __future__ import annotations
 
 import jax
@@ -19,3 +24,35 @@ def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
         kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def accept_speculative(
+    window: jax.Array,      # [b, k] int32: draft window, window[:, 0] is the
+                            #   last committed token, window[:, 1:] proposals
+    target: jax.Array,      # [b, k] int32: target-model greedy outputs
+) -> tuple[jax.Array, jax.Array]:
+    """Vectorized accept-longest-prefix (lossless greedy speculation).
+
+    For each row, `accepted = 1 + n` where n is the length of the longest
+    prefix with ``window[:, i+1] == target[:, i]`` — the target's correction
+    token after the matched prefix is always accepted ("free token"), so
+    accepted is in [1, k].  Returns ``(out, accepted)`` with `out[b, j]` =
+    `target[b, j]` for `j < accepted[b]` and 0 beyond (masked padding).
+
+    Equivalent to the per-slot Python reference:
+
+        n = 0
+        while n < k - 1 and window[s, n + 1] == target[s, n]:
+            n += 1
+        accepted[s] = n + 1
+        out[s, :n + 1] = target[s, :n + 1]
+    """
+    b, k = window.shape
+    if k == 1:
+        return target.astype(jnp.int32), jnp.ones((b,), jnp.int32)
+    match = (window[:, 1:] == target[:, :-1]).astype(jnp.int32)   # [b, k-1]
+    prefix = jnp.cumprod(match, axis=1)                           # [b, k-1]
+    accepted = 1 + jnp.sum(prefix, axis=1)                        # [b] 1..k
+    mask = jnp.arange(k)[None, :] < accepted[:, None]
+    out = jnp.where(mask, target, 0)
+    return out.astype(jnp.int32), accepted.astype(jnp.int32)

@@ -2,8 +2,7 @@
 simulators — including hypothesis property tests on the invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcompat import given, settings, st
 
 from repro.configs import get_config
 from repro.configs.paper_models import GPT3_66B, GPT3_175B, LLAMA_65B

@@ -62,6 +62,31 @@ def test_decode_attention_masks_beyond_len():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_block_skip_bit_identical(dtype):
+    """Ragged continuous batch: skipping fully-masked KV blocks (clamped
+    index_map + pl.when no-op) must be BIT-identical to streaming them all —
+    a fully-masked tile contributes exactly alpha=1.0, p=+0.0."""
+    b, nkv, g, hd, skv, block_k = 5, 2, 4, 64, 512, 128
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(keys[0], (b, nkv, g, hd), dtype)
+    k = jax.random.normal(keys[1], (b, skv, nkv, hd), dtype)
+    v = jax.random.normal(keys[2], (b, skv, nkv, hd), dtype)
+    # raggedness spanning: sub-block, block-aligned, mid, near-full, full
+    lens = jnp.array([1, 128, 200, 511, 512], jnp.int32)
+    skip = decode_attention(q, k, v, lens, block_k=block_k, interpret=True,
+                            block_skip=True)
+    full = decode_attention(q, k, v, lens, block_k=block_k, interpret=True,
+                            block_skip=False)
+    np.testing.assert_array_equal(
+        np.asarray(skip, np.float32), np.asarray(full, np.float32))
+    # and both still match the oracle
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(skip, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
 # ---------------------------------------------------------------------------
 # fc_gemv
 # ---------------------------------------------------------------------------

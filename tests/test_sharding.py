@@ -2,8 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcompat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd

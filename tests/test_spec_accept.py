@@ -1,0 +1,175 @@
+"""Speculative accept/rewind: the device-side vectorized logic must match
+the seed's per-slot Python reference, the fused engine must reproduce the
+host-looped engine token-for-token, and the KV cache position must never
+regress below its pre-window value."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcompat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import PapiEngine, ServeRequest
+from repro.serving.sampler import accept_speculative
+
+
+def _reference_accept(window: np.ndarray, target: np.ndarray):
+    """The seed's per-slot Python loop (engine.py @ PR 0)."""
+    b, k = window.shape
+    accepted = np.zeros(b, np.int64)
+    out = np.zeros((b, k), np.int32)
+    for s in range(b):
+        n = 0
+        while n < k - 1 and window[s, n + 1] == target[s, n]:
+            n += 1
+        accepted[s] = n + 1                       # +1: free token
+        out[s, : n + 1] = target[s, : n + 1]
+    return out, accepted
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_accept_matches_python_reference(b, k, seed):
+    """Random draft/target agreement patterns: a tiny vocab makes partial
+    prefix matches frequent, exercising every accepted-count in [1, k]."""
+    rng = np.random.default_rng(seed)
+    window = rng.integers(0, 3, (b, k)).astype(np.int32)
+    target = rng.integers(0, 3, (b, k)).astype(np.int32)
+    out, acc = accept_speculative(jnp.asarray(window), jnp.asarray(target))
+    ref_out, ref_acc = _reference_accept(window, target)
+    np.testing.assert_array_equal(np.asarray(acc), ref_acc)
+    np.testing.assert_array_equal(np.asarray(out), ref_out)
+    assert np.all(np.asarray(acc) >= 1) and np.all(np.asarray(acc) <= k)
+
+
+def test_accept_full_and_zero_agreement():
+    window = np.array([[5, 7, 9, 11]], np.int32)
+    # full agreement on the 3 proposals: all 4 target tokens accepted
+    target_full = np.array([[7, 9, 11, 13]], np.int32)
+    out, acc = accept_speculative(jnp.asarray(window),
+                                  jnp.asarray(target_full))
+    assert int(acc[0]) == 4
+    np.testing.assert_array_equal(np.asarray(out)[0], [7, 9, 11, 13])
+    # zero agreement: only the free correction token accepted
+    target_none = np.array([[1, 1, 1, 1]], np.int32)
+    out, acc = accept_speculative(jnp.asarray(window),
+                                  jnp.asarray(target_none))
+    assert int(acc[0]) == 1
+    np.testing.assert_array_equal(np.asarray(out)[0], [1, 0, 0, 0])
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    draft_params = init_params(cfg, jax.random.PRNGKey(9))
+    return cfg, params, draft_params
+
+
+def _mk(cfg, params, draft_params, **kw):
+    defaults = dict(max_slots=2, cache_capacity=64, prefill_len=8,
+                    alpha=6.0, eos_token=1, spec_len=3,
+                    draft=(cfg, draft_params))
+    defaults.update(kw)
+    return PapiEngine(cfg, params, **defaults)
+
+
+def test_fused_engine_matches_host_reference(small_model):
+    """The scan-fused device iteration and the seed's per-step host loop must
+    emit identical tokens for identical request streams."""
+    cfg, params, draft_params = small_model
+    reqs = [([3, 5, 7], 9), ([4, 6], 7), ([2, 3, 5, 7, 11], 8)]
+
+    def run(fused):
+        eng = _mk(cfg, params, draft_params, fused=fused)
+        for i, (prompt, n) in enumerate(reqs):
+            eng.submit(ServeRequest(i, list(prompt), max_new_tokens=n))
+        res = {r.req_id: r for r in eng.run(max_iterations=100)}
+        return eng, res
+
+    eng_f, res_f = run(fused=True)
+    eng_h, res_h = run(fused=False)
+    assert sorted(res_f) == sorted(res_h)
+    for rid in res_f:
+        assert res_f[rid].tokens == res_h[rid].tokens, rid
+        assert res_f[rid].finished_reason == res_h[rid].finished_reason
+
+    # the whole point: the fused decode iteration costs ONE host round-trip,
+    # the host-looped reference costs spec_len + 1
+    f_iters = [s for s in eng_f.stats if s.new_tokens > 0]
+    h_iters = [s for s in eng_h.stats if s.new_tokens > 0]
+    assert min(s.transfers for s in f_iters) == 1
+    assert max(s.transfers for s in h_iters) >= eng_h.spec_len + 1
+
+
+def test_cache_pos_never_regresses_below_window_start(small_model):
+    """After every speculative step, each still-active slot's cache position
+    advanced by accepted in [1, spec_len] — the rewind never undershoots the
+    pre-window position."""
+    cfg, params, draft_params = small_model
+    k = 3
+    eng = _mk(cfg, params, draft_params, spec_len=k)
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=12))
+    eng.submit(ServeRequest(1, [4, 6, 8, 10], max_new_tokens=10))
+    steps = 0
+    while (eng.queue or eng.active_slots) and steps < 60:
+        active_before = set(eng.active_slots)
+        pos_before = np.asarray(jax.device_get(eng.cache["pos"]))
+        eng.step()
+        steps += 1
+        pos_after = np.asarray(jax.device_get(eng.cache["pos"]))
+        for s in active_before & set(eng.active_slots):
+            adv = int(pos_after[s]) - int(pos_before[s])
+            assert 1 <= adv <= k, (s, adv)
+
+
+def test_admit_rejects_oversized_prompts(small_model):
+    """A request whose prompt + speculative window cannot fit the slot's KV
+    capacity is rejected up-front instead of silently emitting a 1-token
+    'length' result."""
+    cfg, params, _ = small_model
+    eng = PapiEngine(cfg, params, max_slots=2, cache_capacity=10,
+                     prefill_len=8, alpha=6.0, eos_token=1, spec_len=4)
+    eng.submit(ServeRequest(0, list(range(3, 20)), max_new_tokens=5))
+    # capacity 10 - prefill 8 - spec window 4 < 1  -> rejected
+    res = eng.run(max_iterations=10)
+    assert len(res) == 1
+    assert res[0].finished_reason == "rejected"
+    assert res[0].tokens == []
+
+    # a short prompt still fits and gets a clamped-but-positive budget
+    eng2 = PapiEngine(cfg, params, max_slots=2, cache_capacity=10,
+                      prefill_len=4, alpha=6.0, eos_token=1, spec_len=1)
+    eng2.submit(ServeRequest(1, [3, 5], max_new_tokens=50))
+    res2 = eng2.run(max_iterations=40)
+    assert len(res2) == 1
+    assert res2[0].finished_reason in ("eos", "length")
+    assert 1 <= len(res2[0].tokens) <= 10
+
+
+def test_instant_finish_frees_slot_within_same_step(small_model):
+    """A request that finishes at admission (1-token budget) must hand its
+    slot to the next queued request in the SAME step — admission runs in
+    waves until no slot is instantly freed."""
+    cfg, params, _ = small_model
+    eng = PapiEngine(cfg, params, max_slots=1, cache_capacity=64,
+                     prefill_len=8, alpha=6.0, eos_token=1, spec_len=1)
+    eng.submit(ServeRequest(0, [3, 5], max_new_tokens=1))
+    eng.submit(ServeRequest(1, [4, 6], max_new_tokens=1))
+    eng.submit(ServeRequest(2, [5, 7], max_new_tokens=4))
+    eng.step()
+    # both 1-token requests completed and the third occupies the slot
+    done = sorted(r.req_id for r in eng.results)
+    assert done == [0, 1]
+    assert eng.slot_req[0] is not None and eng.slot_req[0].req_id == 2
+
+
+def test_scheduler_accepts_array_counts():
+    from repro.core.scheduler import PapiScheduler
+    s = PapiScheduler(get_config("granite-8b"), alpha=32.0, tlp=1)
+    s.initial_schedule(16, 1)
+    s.observe_counts(np.array([True, False, True, False]), admitted=1)
+    assert s.rlp == 15
+    s.observe_counts(np.int64(2), admitted=np.int64(0))
+    assert s.rlp == 13
