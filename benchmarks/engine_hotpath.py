@@ -16,7 +16,17 @@ fetch in every iteration.
 Writes BENCH_engine.json next to the repo root so the perf trajectory is
 tracked from this PR onward.
 
+``--mesh dp,tp`` switches to mesh mode: ONLY the unsharded-vs-sharded
+engine A/B runs (§5.3 layout: FC-PIM banks on the tensor axis, KV sharded
+per Attn-PIM unit), on dp*tp forced host devices, and the result is MERGED
+into an existing BENCH_engine.json under a "sharded" key — the fused/legacy
+baselines are never remeasured under forced devices (they timeshare the
+cores and would silently inflate).  Mesh mode exits 1 if the sharded token
+streams diverge from the unsharded engine's; on CPU its throughput delta
+measures partitioning overhead, not speedup.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
+        PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
 """
 from __future__ import annotations
 
@@ -26,29 +36,24 @@ import statistics
 import sys
 from pathlib import Path
 
-import jax
-
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-
-from repro.configs import get_config                      # noqa: E402
-from repro.models import init_params                      # noqa: E402
-from repro.serving import PapiEngine, ServeRequest        # noqa: E402
 
 ROOT = Path(__file__).resolve().parent.parent
 
 
 def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
-               n_requests: int = 6, max_new: int = 20):
+               n_requests: int = 6, max_new: int = 20, mesh=None):
+    from repro.serving import PapiEngine, ServeRequest
     draft = (cfg, draft_params) if spec_len > 1 else None
     eng = PapiEngine(
         cfg, params,
         max_slots=4, cache_capacity=64, prefill_len=8,
         alpha=6.0, eos_token=1, spec_len=spec_len, draft=draft,
-        fused=fused,
+        fused=fused, mesh=mesh,
     )
     for i in range(n_requests):
         eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=max_new))
-    eng.run(max_iterations=400)
+    results = eng.run(max_iterations=400)
 
     # decode-only iterations after compile warmup (first 2 iterations carry
     # trace+compile time; admission iterations carry the prefill fetch)
@@ -69,18 +74,82 @@ def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
         "total_host_transfers": eng.host_transfers,
         "mean_accepted": statistics.fmean(
             s.accepted for s in decode_iters) if decode_iters else 0.0,
+        "tokens": sum(len(r.tokens) for r in results),
+        "tok_per_s": sum(s.new_tokens for s in decode_iters)
+        / max(sum(walls), 1e-9),
+        "token_streams": [r.tokens for r in sorted(results,
+                                                   key=lambda r: r.req_id)],
     }
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec-len", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="also A/B the mesh-sharded engine on dp*tp forced "
+                         "host devices (e.g. 1,8)")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
+
+    # mesh sizing must precede the first jax backend touch
+    from repro.launch.mesh import (force_host_device_count, make_serving_mesh,
+                                   parse_mesh)
+    mesh_shape = parse_mesh(args.mesh) if args.mesh else None
+    if mesh_shape is not None:
+        force_host_device_count(mesh_shape[0] * mesh_shape[1])
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    if mesh_shape is not None:
+        # validate BEFORE any measurement so a short device count can't
+        # waste the whole run
+        dp, tp = mesh_shape
+        if len(jax.devices()) < dp * tp:
+            print(f"--mesh {dp},{tp} needs {dp * tp} devices, have "
+                  f"{len(jax.devices())} (is xla_force_host_platform_"
+                  "device_count already set lower in XLA_FLAGS?)")
+            return 1
 
     cfg = get_config("qwen2-0.5b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     draft_params = init_params(cfg, jax.random.PRNGKey(9))
+
+    if mesh_shape is not None:
+        # Mesh mode measures ONLY the unsharded-vs-sharded engine A/B —
+        # both under the same forced-device environment, apples to apples —
+        # and merges the section into an existing BENCH_engine.json, so the
+        # tracked fused/legacy baselines stay genuine 1-device numbers
+        # (forced host devices timeshare the cores and would inflate them).
+        dp, tp = mesh_shape
+        mesh = make_serving_mesh(dp, tp)
+        single = run_engine(cfg, params, draft_params,
+                            fused=True, spec_len=1)
+        sharded = run_engine(cfg, params, draft_params,
+                             fused=True, spec_len=1, mesh=mesh)
+        section = {
+            "mesh": {"data": dp, "model": tp},
+            "devices": len(jax.devices()),
+            "one_device_tok_per_s": single["tok_per_s"],
+            "mesh_tok_per_s": sharded["tok_per_s"],
+            "tokens_bit_identical":
+                sharded["token_streams"] == single["token_streams"],
+        }
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["sharded"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"mesh {dp}x{tp}: {single['tok_per_s']:.1f} tok/s (unsharded) "
+              f"vs {sharded['tok_per_s']:.1f} tok/s (sharded), "
+              f"tokens identical: {section['tokens_bit_identical']}")
+        print(f"wrote {out}")
+        if not section["tokens_bit_identical"]:
+            print("WARNING: sharded engine diverged from the unsharded "
+                  "token streams")
+            return 1
+        return 0
 
     results = {
         "backend": jax.default_backend(),
@@ -109,6 +178,11 @@ def main() -> int:
             results["plain"]["legacy"]["transfers_per_iter_mean"]
             / results["plain"]["fused"]["transfers_per_iter_mean"],
     }
+
+    # token streams feed the mesh-mode A/B; keep the JSON to the metrics
+    for section in (results["plain"], results["speculative"]):
+        for r in section.values():
+            r.pop("token_streams", None)
 
     Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     s = results["summary"]

@@ -28,6 +28,35 @@ def _current_mesh():
     return getattr(_state, "mesh", None)
 
 
+def current_rules() -> Mapping[str, object] | None:
+    """The installed logical->mesh rule table, or None outside axis_rules."""
+    return _current_rules()
+
+
+def current_mesh():
+    """The installed mesh, or None outside axis_rules (single-device)."""
+    return _current_mesh()
+
+
+def fc_tensor_axis(bank: str = "ffn") -> tuple[object, str | None]:
+    """(mesh, axis) for an FC weight's tensor-parallel split — the mesh axis
+    the rule table maps the weight's *bank* logical dim onto (PAPI §5.3: one
+    FC-PIM bank per shard of that axis; the bank dim is "ffn" for MLP
+    weights, "heads"/"kv_heads" for attention projections).  Returns
+    (None, None) outside a mesh context and (mesh, None) when the rules
+    replicate that dim or the axis is trivial, so callers fall back to the
+    unsharded kernel — keeping the kernel's split in lockstep with how the
+    weight is actually stored."""
+    mesh, rules = _current_mesh(), _current_rules()
+    if mesh is None or rules is None:
+        return None, None
+    axis = rules.get(bank)
+    if not isinstance(axis, str) or axis not in dict(mesh.shape) \
+            or mesh.shape[axis] <= 1:
+        return mesh, None
+    return mesh, axis
+
+
 @contextlib.contextmanager
 def axis_rules(rules: Mapping[str, object], mesh=None):
     """Install logical->mesh axis rules.  Values are mesh axis names, tuples
@@ -172,11 +201,19 @@ def train_rules(multi_pod: bool = False, fsdp: bool = True) -> dict:
     return rules
 
 
-def serve_rules(multi_pod: bool = False, long_context: bool = False) -> dict:
+def serve_rules(multi_pod: bool = False, long_context: bool = False,
+                attn_pim: bool = False) -> dict:
     """Inference rules.  Decode shards the KV cache sequence dim over `model`
     (context parallelism — the Attn-PIM disaggregation analogue); for
     long-context batch=1 the cache seq dim spans (data, model) and activations
-    replicate over data."""
+    replicate over data.
+
+    ``attn_pim=True`` moves the KV split from the sequence dim to the KV
+    *head* dim (overriding ``long_context``): the flash-decode Pallas kernel
+    is shard_mapped one Attn-PIM unit per KV-head shard, so the cache must be
+    *stored* head-sharded or every decode step would reshard it seq->head and
+    back.  Head counts that don't divide the axis replicate — which again
+    matches the kernel's replicated fallback."""
     data = ("pod", "data") if multi_pod else "data"
     kv_seq = ("data", "model") if long_context else "model"
     if multi_pod and long_context:
@@ -200,4 +237,7 @@ def serve_rules(multi_pod: bool = False, long_context: bool = False) -> dict:
         "fsdp": None,            # inference: weights fully resident
         "scan": None,
     }
+    if attn_pim:
+        rules["act_kv_seq"] = None
+        rules["kv_heads"] = "model"
     return rules

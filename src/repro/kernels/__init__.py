@@ -1,3 +1,5 @@
-from repro.kernels.ops import decode_attention, fc_forward, fc_gemv, ssd_scan
+from repro.kernels.ops import (decode_attention, decode_attention_sharded,
+                               fc_forward, fc_gemv, ssd_scan)
 
-__all__ = ["decode_attention", "fc_forward", "fc_gemv", "ssd_scan"]
+__all__ = ["decode_attention", "decode_attention_sharded", "fc_forward",
+           "fc_gemv", "ssd_scan"]

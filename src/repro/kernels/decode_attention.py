@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.compat import tpu_compiler_params
 
@@ -177,3 +179,44 @@ def decode_attention(
         interpret=interpret,
         name="papi_decode_attention",
     )(lens1, q, k_cache, v_cache)
+
+
+def decode_attention_sharded(
+    q: jax.Array,          # [b, nkv, g, hd]
+    k_cache: jax.Array,    # [b, S, nkv, hd]
+    v_cache: jax.Array,    # [b, S, nkv, hd]
+    lens: jax.Array,       # [b] int32 valid lengths
+    *,
+    mesh,
+    axis: str = "model",
+    block_k: int = 512,
+    interpret: bool | None = None,
+    block_skip: bool = True,
+) -> jax.Array:
+    """One Attn-PIM unit per KV shard (§5.3): the kernel, `shard_map`-split
+    over the KV-head dim of `axis`.
+
+    Attention-PIM in the paper sits next to its slice of the KV cache and
+    never talks to its neighbours; the head dim is the axis with exactly that
+    property — each shard runs the full online-softmax pass over its local
+    heads' KV stream and no cross-shard reduction exists, so the result is
+    bit-identical to the unsharded kernel (tested).  When the head count does
+    not divide the axis (small GQA models on wide meshes) the unsharded
+    kernel runs replicated instead — same divisibility fallback the rule
+    tables use for weights.
+    """
+    nkv = q.shape[1]
+    size = dict(mesh.shape).get(axis, 1)
+    if size <= 1 or nkv % size != 0:
+        return decode_attention(q, k_cache, v_cache, lens, block_k=block_k,
+                                interpret=interpret, block_skip=block_skip)
+    kernel = functools.partial(decode_attention, block_k=block_k,
+                               interpret=interpret, block_skip=block_skip)
+    return shard_map(
+        lambda qs, ks, vs, ls: kernel(qs, ks, vs, ls),
+        mesh=mesh,
+        in_specs=(P(None, axis), P(None, None, axis), P(None, None, axis),
+                  P()),
+        out_specs=P(None, axis),
+        check_rep=False,
+    )(q, k_cache, v_cache, lens)

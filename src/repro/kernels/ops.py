@@ -14,11 +14,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_sharded)
 from repro.kernels.fc_gemv import fc_gemv
 from repro.kernels.ssd_scan import ssd_scan
 
-__all__ = ["decode_attention", "fc_gemv", "ssd_scan", "fc_forward"]
+__all__ = ["decode_attention", "decode_attention_sharded", "fc_gemv",
+           "ssd_scan", "fc_forward"]
 
 
 def fc_forward(x: jax.Array, w: jax.Array, variant: str = "pu",

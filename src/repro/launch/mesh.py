@@ -6,6 +6,8 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* first jax init.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 
@@ -23,3 +25,34 @@ def make_host_mesh():
     the runnable examples on CPU."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_serving_mesh(dp: int = 1, tp: int = 1):
+    """The serving engine's (data, model) mesh.  `model` is the tensor axis:
+    FC weights split into one FC-PIM bank per shard and the KV cache slices
+    one Attn-PIM unit per shard (§5.3); `data` replicates the engine for
+    throughput.  Uses the first dp*tp devices."""
+    return jax.make_mesh((dp, tp), ("data", "model"), devices=jax.devices()[: dp * tp])
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """Parse a ``--mesh dp,tp`` CLI value into (dp, tp)."""
+    parts = spec.split(",")
+    if len(parts) != 2:
+        raise ValueError(f"--mesh wants 'dp,tp', got {spec!r}")
+    dp, tp = (int(p) for p in parts)
+    if dp < 1 or tp < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return dp, tp
+
+
+def force_host_device_count(n: int) -> None:
+    """Ask XLA's CPU backend for `n` host devices.  Only effective BEFORE the
+    first jax backend touch (importing jax is fine; creating an array is
+    not), so launchers call this right after argument parsing.  A count
+    already forced via XLA_FLAGS is left alone."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()

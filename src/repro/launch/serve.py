@@ -5,18 +5,23 @@
 
 Prints per-iteration scheduler decisions (RLP, TLP, AI estimate, chosen FC
 path) — the runtime view of Figure 5(d).
+
+Mesh serving (§5.3): ``--mesh dp,tp`` builds a (data, model) mesh and runs
+the engine sharded — FC weights split one FC-PIM bank per `model` shard, KV
+cache sliced one Attn-PIM unit per shard.  On a CPU host the launcher forces
+dp*tp host devices automatically, so
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
+        --requests 16 --mesh 1,8
+
+runs the full 8-way tensor-parallel engine on one machine (token streams
+are identical to the 1-device run — greedy argmax is invariant to the
+partitioning's ulp-level logit shifts).  ``--attn-pim`` additionally routes
+plain decode attention through the Pallas flash-decode kernel.
 """
 from __future__ import annotations
 
 import argparse
-
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.core.traces import generate_trace
-from repro.models import init_params
-from repro.serving import PapiEngine, ServeRequest
 
 
 def main() -> None:
@@ -29,7 +34,42 @@ def main() -> None:
     ap.add_argument("--draft-arch", default=None)
     ap.add_argument("--task", default="general-qa")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="run mesh-sharded, e.g. '1,8' = 8-way tensor "
+                         "parallel (FC-PIM banks / Attn-PIM KV shards)")
+    ap.add_argument("--attn-pim", action="store_true",
+                    help="decode attention through the Pallas flash-decode "
+                         "kernel (sharded per KV shard under --mesh)")
     args = ap.parse_args()
+
+    # Mesh sizing must happen before the first jax backend touch, hence the
+    # deferred repro/jax imports below.
+    from repro.launch.mesh import force_host_device_count, parse_mesh
+    mesh_shape = parse_mesh(args.mesh) if args.mesh else None
+    if mesh_shape is not None:
+        force_host_device_count(mesh_shape[0] * mesh_shape[1])
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.traces import generate_trace
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import init_params
+    from repro.serving import PapiEngine, ServeRequest
+
+    mesh = None
+    if mesh_shape is not None:
+        dp, tp = mesh_shape
+        n = len(jax.devices())
+        if n < dp * tp:
+            raise SystemExit(
+                f"--mesh {dp},{tp} needs {dp * tp} devices, have {n} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{dp * tp} before launch)")
+        mesh = make_serving_mesh(dp, tp)
+        print(f"mesh: {dict(mesh.shape)} over {dp * tp} of {n} "
+              f"{jax.default_backend()} devices")
 
     cfg = get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -41,7 +81,7 @@ def main() -> None:
     eng = PapiEngine(
         cfg, params, max_slots=args.max_slots, cache_capacity=256,
         prefill_len=32, alpha=args.alpha, spec_len=args.spec_len,
-        draft=draft,
+        draft=draft, mesh=mesh, attn_pim=args.attn_pim,
     )
     rng = np.random.default_rng(args.seed)
     for i, req in enumerate(generate_trace(args.task, args.requests,

@@ -1,5 +1,6 @@
 from repro.models.model import (
     cache_logical_axes,
+    cache_shardings,
     decode_step,
     forward_train,
     init_cache,
@@ -7,12 +8,14 @@ from repro.models.model import (
     lm_logits,
     param_logical_axes,
     param_shapes,
+    param_shardings,
     prefill,
     prefill_to_slots,
 )
 
 __all__ = [
     "cache_logical_axes",
+    "cache_shardings",
     "decode_step",
     "forward_train",
     "init_cache",
@@ -20,6 +23,7 @@ __all__ = [
     "lm_logits",
     "param_logical_axes",
     "param_shapes",
+    "param_shardings",
     "prefill",
     "prefill_to_slots",
 ]

@@ -14,16 +14,38 @@ path), softmax/normalization statistics accumulate in f32.
 """
 from __future__ import annotations
 
+import contextlib
 import math
+import threading
 from typing import Mapping
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import current_mesh, shard
 from repro.models.linear import papi_linear
 
 Params = Mapping[str, jax.Array]
+
+_attn_state = threading.local()
+
+
+def current_attn_impl() -> str:
+    """Decode-attention implementation: "xla" (default softmax path) or
+    "pim" (the Pallas flash-decode kernel — the Attn-PIM analogue, sharded
+    one unit per KV shard when a mesh is installed)."""
+    return getattr(_attn_state, "impl", "xla")
+
+
+@contextlib.contextmanager
+def attn_impl(impl: str):
+    assert impl in ("xla", "pim"), impl
+    prev = current_attn_impl()
+    _attn_state.impl = impl
+    try:
+        yield
+    finally:
+        _attn_state.impl = prev
 
 
 # ---------------------------------------------------------------------------
@@ -106,19 +128,19 @@ def apply_m_rope(
 
 def swiglu_mlp(x: jax.Array, p: Params) -> jax.Array:
     """LLaMA-style gated MLP: down( silu(gate(x)) * up(x) )."""
-    gate = papi_linear(x, p["w_gate"])
-    up = papi_linear(x, p["w_up"])
+    gate = papi_linear(x, p["w_gate"], tp="col")
+    up = papi_linear(x, p["w_up"], tp="col")
     act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
     act = shard(act, None, None, "act_ffn")
-    return papi_linear(act, p["w_down"])
+    return papi_linear(act, p["w_down"], tp="row")
 
 
 def gelu_mlp(x: jax.Array, p: Params) -> jax.Array:
     """GPT-style 2-layer MLP with biases."""
-    h = papi_linear(x, p["w_in"]) + p["b_in"]
+    h = papi_linear(x, p["w_in"], tp="col") + p["b_in"]
     h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
     h = shard(h, None, None, "act_ffn")
-    return papi_linear(h, p["w_out"]) + p["b_out"]
+    return papi_linear(h, p["w_out"], tp="row") + p["b_out"]
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +159,12 @@ def qkv_project(
 
     def proj(w):  # [d, nh, hd] applied through the scheduled FC path
         nh, hd = w.shape[1], w.shape[2]
-        return papi_linear(x, w.reshape(d, nh * hd)).reshape(b, s, nh, hd)
+        # the K/V weights' logical bank dim is "kv_heads" (for MHA every
+        # projection is, matching their stored ("kv_heads" -> replicated)
+        # layout); only GQA's query weight banks over "heads"
+        bank = "kv_heads" if nh == num_kv_heads else "heads"
+        return papi_linear(x, w.reshape(d, nh * hd), tp="col", bank=bank,
+                           units=nh).reshape(b, s, nh, hd)
 
     q, k, v = proj(p["w_q"]), proj(p["w_k"]), proj(p["w_v"])
     if "b_q" in p:
@@ -159,7 +186,8 @@ def out_project(attn: jax.Array, p: Params) -> jax.Array:
     """[b, s, nH, hd] -> [b, s, d]."""
     b, s, nh, hd = attn.shape
     w = p["w_o"]
-    return papi_linear(attn.reshape(b, s, nh * hd), w.reshape(nh * hd, -1))
+    return papi_linear(attn.reshape(b, s, nh * hd), w.reshape(nh * hd, -1),
+                       tp="row", bank="heads", units=nh)
 
 
 def _repeat_kv(k: jax.Array, group: int) -> jax.Array:
@@ -302,3 +330,29 @@ def decode_attention_xla(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bthgs,bshk->bthgk", p.astype(v_cache.dtype), v_cache)
     return out.reshape(b, t, nh, hd)
+
+
+def decode_attention_pim(
+    q: jax.Array,        # [b, 1, nH, hd] — single-token decode only
+    k_cache: jax.Array,  # [b, S, nKV, hd]
+    v_cache: jax.Array,  # [b, S, nKV, hd]
+    lens: jax.Array,     # [b] valid lengths (new token included)
+) -> jax.Array:
+    """Decode attention through the Pallas flash-decode kernel — the
+    Attn-PIM path.  Under a mesh the kernel is `shard_map`-split over KV
+    heads (one Attn-PIM unit per KV shard, see
+    `kernels.decode_attention_sharded`); head layout matches
+    `decode_attention_xla`'s GQA grouping (head = kv * group + g)."""
+    from repro.kernels.decode_attention import (decode_attention,
+                                                decode_attention_sharded)
+    b, t, nh, hd = q.shape
+    assert t == 1, "the flash-decode kernel verifies one token at a time"
+    nkv = k_cache.shape[2]
+    qh = q[:, 0].reshape(b, nkv, nh // nkv, hd)
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
+    mesh = current_mesh()
+    if mesh is not None:
+        out = decode_attention_sharded(qh, k_cache, v_cache, lens, mesh=mesh)
+    else:
+        out = decode_attention(qh, k_cache, v_cache, lens)
+    return out.reshape(b, 1, nh, hd)

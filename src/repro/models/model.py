@@ -215,6 +215,25 @@ def param_shapes(cfg: ModelConfig) -> PyTree:
     return jax.tree.map(to_sds, model_spec(cfg), is_leaf=_is_pspec)
 
 
+def param_shardings(cfg: ModelConfig, rules, mesh) -> PyTree:
+    """NamedShardings for the params pytree under a rule table + mesh.
+    Dims the mesh axes don't divide replicate (per-arch head counts etc.) —
+    the same `filter_spec_for_shape` policy activation constraints use."""
+    from repro.distributed.sharding import tree_shardings
+    return tree_shardings(param_logical_axes(cfg), param_shapes(cfg),
+                          rules, mesh)
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, capacity: int,
+                    rules, mesh) -> PyTree:
+    """NamedShardings for the decode cache (mirrors init_cache).  Under
+    `serve_rules()` the KV sequence dim lands on the tensor axis — each
+    shard owns a contiguous KV slice, the Attn-PIM-next-to-its-KV layout."""
+    from repro.distributed.sharding import tree_shardings
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+    return tree_shardings(cache_logical_axes(cfg), shapes, rules, mesh)
+
+
 # ===========================================================================
 # KV / state caches
 # ===========================================================================
@@ -305,8 +324,15 @@ def attention_block(
         assert kv is not None and pos is not None
         k_cache, v_cache = _write_kv(kv[0], kv[1], k, v, pos)
         t = q.shape[1]
-        attn = L.decode_attention_xla(q, k_cache, v_cache,
-                                      cache_len=pos + t, q_offset=pos)
+        if L.current_attn_impl() == "pim" and t == 1:
+            # Attn-PIM: the Pallas flash-decode kernel, one unit per KV
+            # shard under a mesh.  TLP>1 verify windows need intra-window
+            # causal masking the single-query kernel doesn't model, so they
+            # stay on the XLA path.
+            attn = L.decode_attention_pim(q, k_cache, v_cache, lens=pos + 1)
+        else:
+            attn = L.decode_attention_xla(q, k_cache, v_cache,
+                                          cache_len=pos + t, q_offset=pos)
         new_kv = (k_cache, v_cache)
     else:
         attn = L.flash_attention(q, k, v, causal=cfg.causal)

@@ -42,6 +42,34 @@ program:
 Python accept reference — kept as the oracle for the property tests and the
 `benchmarks/engine_hotpath.py` A/B.
 
+Mesh execution (§5.3)
+---------------------
+Pass ``mesh=`` (e.g. `launch.mesh.make_serving_mesh(dp, tp)`) and the engine
+becomes mesh-native; ``rules`` defaults to
+`distributed.sharding.serve_rules()`:
+
+  * params are `device_put` onto `models.param_shardings` — FC weights split
+    over the tensor ("model") axis, i.e. one FC-PIM weight bank per shard;
+  * the KV cache is placed by `models.cache_shardings` — under serve rules
+    the cache *sequence* dim lands on the tensor axis (context-parallel KV
+    slices); with ``attn_pim=True`` the rules instead store the cache split
+    over KV *heads*, the same units the flash-decode kernel shard_maps over,
+    so each Attn-PIM shard sits next to its resident KV slice and no
+    per-step resharding occurs;
+  * every jitted entry point (prefill waves, both fused step programs, the
+    legacy host loop) is traced inside ``axis_rules(rules, mesh)``, so the
+    `shard()` annotations in the model resolve and GSPMD partitions the
+    step.  The "pim" FC path additionally runs `fc_gemv` under `shard_map`
+    (see `models.linear`), and ``attn_pim=True`` routes plain decode through
+    the flash-decode Pallas kernel sharded one unit per KV-head shard.
+
+The scheduler's per-iteration FC_PU <-> FC_PIM flip keeps working under a
+mesh because the jit caches are keyed on the variant — each (kind, tlp,
+variant) traces its own partitioned executable once, and a reschedule is
+still just the dispatch of the other one.  Greedy token streams are
+unchanged by the mesh (reduction reorder moves logits by ulps, never the
+argmax — asserted 1-device vs 8-device in `tests/test_serving_sharded.py`).
+
 Compiled-function cache keys
 ----------------------------
 All jitted entry points are cached on ``(kind, tlp, fc_variant,
@@ -59,6 +87,7 @@ trips instead of guessing.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from functools import partial
@@ -70,7 +99,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import PapiScheduler
-from repro.models import decode_step, init_cache, prefill_to_slots
+from repro.distributed.sharding import axis_rules, serve_rules
+from repro.models import (cache_shardings, decode_step, init_cache,
+                          param_shardings, prefill_to_slots)
+from repro.models.layers import attn_impl
 from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
 from repro.serving.sampler import accept_speculative, greedy
 
@@ -105,8 +137,14 @@ class IterStats:
 
 
 class PapiEngine:
-    """Single-host serving engine (the multi-pod deployment lowers the same
-    step functions through `launch.serve`)."""
+    """Serving engine over one device by default, or over a whole mesh.
+
+    ``mesh``/``rules`` make the engine mesh-native (see the module
+    docstring): params and the KV cache are placed on `serve_rules()`
+    shardings and every compiled step runs partitioned.  ``attn_pim=True``
+    additionally moves plain (TLP=1) decode attention onto the Pallas
+    flash-decode kernel — the Attn-PIM unit — sharded per KV shard under a
+    mesh.  `launch.serve` drives both layouts from the CLI."""
 
     def __init__(
         self,
@@ -122,6 +160,9 @@ class PapiEngine:
         eos_token: int = 2,
         pim_interpret: bool | None = None,
         fused: bool = True,
+        mesh: Any | None = None,
+        rules: dict | None = None,
+        attn_pim: bool = False,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
         self.cfg, self.params = cfg, params
@@ -132,11 +173,26 @@ class PapiEngine:
         self.spec_len = spec_len
         self.pim_interpret = pim_interpret
         self.fused = fused
+        self.mesh = mesh
+        # attn_pim stores the KV cache head-sharded instead of seq-sharded so
+        # the flash-decode kernel's per-KV-shard units match the resident
+        # layout (no per-step resharding) — see serve_rules(attn_pim=True)
+        self.rules = (dict(rules) if rules is not None
+                      else (serve_rules(attn_pim=attn_pim)
+                            if mesh is not None else None))
+        self.attn_pim = attn_pim
         self.scheduler = PapiScheduler(cfg, alpha=alpha, tlp=spec_len,
                                        eos_token=eos_token)
         self.scheduler.initial_schedule(0, spec_len)
 
         self.cache = init_cache(cfg, max_slots, cache_capacity)
+        if mesh is not None:
+            self.params = jax.device_put(
+                self.params, param_shardings(cfg, self.rules, mesh))
+            self.cache = jax.device_put(
+                self.cache,
+                cache_shardings(cfg, max_slots, cache_capacity, self.rules,
+                                mesh))
         # per-slot host state
         self.slot_req: list[ServeRequest | None] = [None] * max_slots
         self.slot_tokens: list[list[int]] = [[] for _ in range(max_slots)]
@@ -151,6 +207,14 @@ class PapiEngine:
             self.draft_cfg, self.draft_params = draft
             self.draft_cache = init_cache(self.draft_cfg, max_slots,
                                           cache_capacity)
+            if mesh is not None:
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    param_shardings(self.draft_cfg, self.rules, mesh))
+                self.draft_cache = jax.device_put(
+                    self.draft_cache,
+                    cache_shardings(self.draft_cfg, max_slots,
+                                    cache_capacity, self.rules, mesh))
         else:
             self.draft_cfg = self.draft_params = self.draft_cache = None
 
@@ -174,10 +238,21 @@ class PapiEngine:
 
     # ------------------------------------------------------------- internals
     def _fetch(self, *arrays):
-        """Single device->host sync round-trip (counted)."""
+        """Single device->host sync round-trip (counted).  Sharded arrays
+        gather here — still one round trip from the host's point of view."""
         self.host_transfers += 1
         got = jax.device_get(arrays)
         return got[0] if len(arrays) == 1 else got
+
+    def _scope(self):
+        """The mesh trace/dispatch scope: installs the logical->mesh rules
+        so `shard()` constraints and the shard_map'd kernels resolve.  Every
+        compiled entry point must be CALLED under it too (papi_linear and
+        the attn hook read it at trace time, and tracing happens lazily on
+        the first call of each (kind, tlp, variant) key)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return axis_rules(self.rules, self.mesh)
 
     def _jit_key(self, kind: str, tlp: int) -> tuple:
         return (kind, tlp, self.scheduler.fc_assignment, self.pim_interpret)
@@ -308,11 +383,12 @@ class PapiEngine:
         batch = {"tokens": jnp.asarray(tokens),
                  "prompt_lens": jnp.asarray(lens)}
         src_dev = jnp.asarray(src)
-        first, self.cache = self._get_prefill("main")(
-            self.params, batch, self.cache, src_dev)
-        if self.draft_cfg is not None:
-            _, self.draft_cache = self._get_prefill("draft")(
-                self.draft_params, batch, self.draft_cache, src_dev)
+        with self._scope():
+            first, self.cache = self._get_prefill("main")(
+                self.params, batch, self.cache, src_dev)
+            if self.draft_cfg is not None:
+                _, self.draft_cache = self._get_prefill("draft")(
+                    self.draft_params, batch, self.draft_cache, src_dev)
         first_h = self._fetch(first)
 
         admitted = 0
@@ -340,7 +416,9 @@ class PapiEngine:
         [slots, <=tlp], accepted counts [slots], eos-finished mask|None)."""
         variant = self.scheduler.fc_assignment
         tlp = self.spec_len
-        with fc_variant(variant, interpret=self.pim_interpret):
+        with self._scope(), \
+                fc_variant(variant, interpret=self.pim_interpret), \
+                attn_impl("pim" if self.attn_pim else "xla"):
             if tlp <= 1 or self.draft_cfg is None:
                 last = jnp.asarray(self.slot_last)
                 if self.fused:

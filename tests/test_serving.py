@@ -124,6 +124,20 @@ def test_tlp_register_update_reflected(small_model):
     assert eng.scheduler.fc_assignment == "pu"   # 1*8 > 6
 
 
+def test_attn_pim_path_matches_xla(small_model):
+    """attn_pim=True routes plain decode through the Pallas flash-decode
+    kernel (interpret mode on CPU); greedy tokens must match the XLA path."""
+    cfg, params = small_model
+    prompt = [3, 5, 7, 11]
+
+    def run(**kw):
+        eng = _mk_engine(cfg, params, **kw)
+        eng.submit(ServeRequest(0, prompt, max_new_tokens=3))
+        return eng.run(max_iterations=20)[0].tokens
+
+    assert run(attn_pim=True) == run()
+
+
 def test_pim_variant_runs_real_fc_gemv(small_model):
     """Force the pim path (interpret mode): the engine's decode must route
     FC projections through the Pallas kernel and still match the pu path."""

@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Fail CI on broken *relative* links in the repo's markdown files.
+
+Checks every ``[text](target)`` whose target is not an absolute URL or a
+pure in-page anchor, resolving it against the file that contains it.  Run
+from anywhere:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def md_files() -> list[Path]:
+    return [p for p in ROOT.rglob("*.md")
+            if not SKIP_DIRS & set(part for part in p.parts)]
+
+
+def check(path: Path) -> list[str]:
+    errors = []
+    for m in LINK.finditer(path.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = [e for p in md_files() for e in check(p)]
+    for e in errors:
+        print(e)
+    files = len(md_files())
+    print(f"checked {files} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
