@@ -25,8 +25,17 @@ cores and would silently inflate).  Mesh mode exits 1 if the sharded token
 streams diverge from the unsharded engine's; on CPU its throughput delta
 measures partitioning overhead, not speedup.
 
+``--kv paged`` A/Bs the dense per-slot slab layout against the paged
+Attn-PIM bank-row layout (`serving/kv_pages.py`): decode throughput and
+peak *resident* KV bytes (dense always holds its full slabs; paged
+residency is the page-pool watermark) on a mixed-length greedy +
+speculative workload.  The section merges into BENCH_engine.json under a
+"paged" key and the run exits 1 if the paged token streams diverge from
+the dense engine's — the same identity gate as ``--mesh``.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
         PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
+        PYTHONPATH=src python benchmarks/engine_hotpath.py --kv paged
 """
 from __future__ import annotations
 
@@ -42,17 +51,19 @@ ROOT = Path(__file__).resolve().parent.parent
 
 
 def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
-               n_requests: int = 6, max_new: int = 20, mesh=None):
+               n_requests: int = 6, max_new: int = 20, mesh=None,
+               max_new_fn=None, eos_token: int = 1, **engine_kw):
     from repro.serving import PapiEngine, ServeRequest
     draft = (cfg, draft_params) if spec_len > 1 else None
     eng = PapiEngine(
         cfg, params,
         max_slots=4, cache_capacity=64, prefill_len=8,
-        alpha=6.0, eos_token=1, spec_len=spec_len, draft=draft,
-        fused=fused, mesh=mesh,
+        alpha=6.0, eos_token=eos_token, spec_len=spec_len, draft=draft,
+        fused=fused, mesh=mesh, **engine_kw,
     )
     for i in range(n_requests):
-        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=max_new))
+        n = max_new_fn(i) if max_new_fn is not None else max_new
+        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=n))
     results = eng.run(max_iterations=400)
 
     # decode-only iterations after compile warmup (first 2 iterations carry
@@ -62,6 +73,19 @@ def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
         decode_iters = [s for s in eng.stats if s.new_tokens > 0]
     walls = [s.wall_s for s in decode_iters]
     transfers = [s.transfers for s in decode_iters]
+    # KV memory accounting: dense reserves its full slabs for the whole
+    # run; paged residency is the page-pool watermark (peak pages actually
+    # mapped), the utilization win the paged layout exists for
+    def cache_bytes(c):
+        return sum(c[k2].size * c[k2].dtype.itemsize
+                   for k2 in ("k", "v") if c is not None and k2 in c)
+
+    reserved = cache_bytes(eng.cache) + cache_bytes(eng.draft_cache)
+    if eng.kv is not None:
+        per_page = reserved // (eng.kv.alloc.num_pages + 1)
+        resident = eng.kv.alloc.watermark * per_page
+    else:
+        resident = reserved
     return {
         "fused": fused,
         "spec_len": spec_len,
@@ -77,6 +101,8 @@ def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
         "tokens": sum(len(r.tokens) for r in results),
         "tok_per_s": sum(s.new_tokens for s in decode_iters)
         / max(sum(walls), 1e-9),
+        "kv_bytes_reserved": reserved,
+        "kv_bytes_resident_peak": resident,
         "token_streams": [r.tokens for r in sorted(results,
                                                    key=lambda r: r.req_id)],
     }
@@ -88,8 +114,21 @@ def main() -> int:
     ap.add_argument("--mesh", default=None, metavar="DP,TP",
                     help="also A/B the mesh-sharded engine on dp*tp forced "
                          "host devices (e.g. 1,8)")
+    ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
+                    help="'paged' A/Bs the dense vs paged KV layout "
+                         "(throughput + resident KV bytes, token-identity "
+                         "gate) and merges a 'paged' section into the "
+                         "existing BENCH_engine.json")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
+
+    if args.mesh and args.kv == "paged":
+        # each mode is its own early-returning A/B section; combining them
+        # would silently skip the mesh identity gate
+        print("--mesh and --kv paged are separate A/B modes: run one per "
+              "invocation (each merges its own section into --out)")
+        return 2
 
     # mesh sizing must precede the first jax backend touch
     from repro.launch.mesh import (force_host_device_count, make_serving_mesh,
@@ -116,6 +155,50 @@ def main() -> int:
     cfg = get_config("qwen2-0.5b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     draft_params = init_params(cfg, jax.random.PRNGKey(9))
+
+    if args.kv == "paged":
+        # Paged mode A/Bs ONLY dense-vs-paged (greedy + speculative, mixed
+        # request lengths so admission/growth/rewind all run) and MERGES a
+        # "paged" section into the tracked BENCH_engine.json — the
+        # fused/legacy baselines are not remeasured.  Exit 1 if the paged
+        # token streams diverge from the dense engine's (same gate as
+        # --mesh): the layout must change memory economics, never tokens.
+        ragged = lambda i: 8 + 5 * i
+        eos = cfg.vocab_size - 1      # never fires with random-init weights
+        common = dict(fused=True, max_new_fn=ragged, eos_token=eos)
+        paged_kw = dict(kv_layout="paged", page_size=args.page_size)
+        section = {"page_size": args.page_size, "modes": {}}
+        identical = True
+        for label, spec in (("plain", 1), ("speculative", args.spec_len)):
+            dense = run_engine(cfg, params, draft_params, spec_len=spec,
+                               **common)
+            paged = run_engine(cfg, params, draft_params, spec_len=spec,
+                               **common, **paged_kw)
+            same = paged["token_streams"] == dense["token_streams"]
+            identical = identical and same
+            section["modes"][label] = {
+                "dense_tok_per_s": dense["tok_per_s"],
+                "paged_tok_per_s": paged["tok_per_s"],
+                "dense_kv_bytes_resident": dense["kv_bytes_resident_peak"],
+                "paged_kv_bytes_resident": paged["kv_bytes_resident_peak"],
+                "paged_kv_bytes_reserved": paged["kv_bytes_reserved"],
+                "tokens_bit_identical": same,
+            }
+            print(f"{label}: {dense['tok_per_s']:.1f} tok/s dense vs "
+                  f"{paged['tok_per_s']:.1f} tok/s paged; resident KV "
+                  f"{dense['kv_bytes_resident_peak'] / 1e6:.2f}MB -> "
+                  f"{paged['kv_bytes_resident_peak'] / 1e6:.2f}MB, "
+                  f"tokens identical: {same}")
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["paged"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"wrote {out}")
+        if not identical:
+            print("WARNING: paged engine diverged from the dense token "
+                  "streams")
+            return 1
+        return 0
 
     if mesh_shape is not None:
         # Mesh mode measures ONLY the unsharded-vs-sharded engine A/B —

@@ -6,7 +6,15 @@ on the compute-optimized path while parallelism is high.  Requests arrive
 mid-flight (mixed continuous batching).
 
     PYTHONPATH=src python examples/serve_speculative.py
+    PYTHONPATH=src python examples/serve_speculative.py --paged
+
+``--paged`` swaps the per-slot KV slabs for the paged Attn-PIM bank-row
+layout (pooled pages + block tables, page-budgeted admission; speculative
+rejections return their pages to the pool) — the token streams are
+identical, only the memory economics change.
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -15,6 +23,11 @@ from repro.models import init_params
 from repro.serving import PapiEngine, ServeRequest
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (Attn-PIM bank-row pages)")
+    args = ap.parse_args()
+
     cfg = get_config("granite-8b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     # self-draft (same weights) => high acceptance; a real deployment uses a
@@ -24,6 +37,7 @@ def main():
     engine = PapiEngine(
         cfg, params, max_slots=4, cache_capacity=128, prefill_len=16,
         alpha=6.0, spec_len=3, draft=draft,
+        kv_layout="paged" if args.paged else "dense", page_size=16,
     )
     rng = np.random.default_rng(0)
     for i in range(4):
@@ -46,6 +60,11 @@ def main():
     print(f"tokens/iteration: "
           f"{sum(len(r.tokens) for r in results) / engine.iteration:.2f} "
           "(>1 => speculative parallelism paying off)")
+    if engine.kv is not None:
+        st = engine.kv.stats()
+        print(f"kv pages: watermark {st.watermark}/{st.num_pages} "
+              f"({st.page_size} tokens each) — rejected windows returned "
+              "their pages to the pool")
 
 if __name__ == "__main__":
     main()

@@ -1,5 +1,7 @@
 from repro.kernels.ops import (decode_attention, decode_attention_sharded,
-                               fc_forward, fc_gemv, ssd_scan)
+                               fc_forward, fc_gemv, paged_decode_attention,
+                               paged_decode_attention_sharded, ssd_scan)
 
 __all__ = ["decode_attention", "decode_attention_sharded", "fc_forward",
-           "fc_gemv", "ssd_scan"]
+           "fc_gemv", "paged_decode_attention",
+           "paged_decode_attention_sharded", "ssd_scan"]

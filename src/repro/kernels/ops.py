@@ -17,9 +17,12 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_sharded)
 from repro.kernels.fc_gemv import fc_gemv
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention, paged_decode_attention_sharded)
 from repro.kernels.ssd_scan import ssd_scan
 
 __all__ = ["decode_attention", "decode_attention_sharded", "fc_gemv",
+           "paged_decode_attention", "paged_decode_attention_sharded",
            "ssd_scan", "fc_forward"]
 
 

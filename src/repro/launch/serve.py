@@ -18,6 +18,14 @@ runs the full 8-way tensor-parallel engine on one machine (token streams
 are identical to the 1-device run — greedy argmax is invariant to the
 partitioning's ulp-level logit shifts).  ``--attn-pim`` additionally routes
 plain decode attention through the Pallas flash-decode kernel.
+
+``--kv paged`` switches the KV cache to the Attn-PIM bank-row layout:
+pooled fixed-size pages + per-slot block tables, page-budgeted admission
+(a request enters iff pages for prompt + max_new + spec window are
+available) — per-request context is bounded by the pool, not a uniform
+slot.  Token streams are identical to ``--kv dense`` on any workload both
+layouts can hold.  Composes with ``--attn-pim`` (block-table Pallas
+kernel) and ``--mesh`` (KV-head-sharded paged pools).
 """
 from __future__ import annotations
 
@@ -40,6 +48,19 @@ def main() -> None:
     ap.add_argument("--attn-pim", action="store_true",
                     help="decode attention through the Pallas flash-decode "
                          "kernel (sharded per KV shard under --mesh)")
+    ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
+                    help="KV-cache layout: 'dense' per-slot slabs, or "
+                         "'paged' Attn-PIM bank-row pages with block tables "
+                         "and page-budgeted admission (long contexts share "
+                         "one pooled budget instead of uniform slots)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--kv paged; one Attn-PIM "
+                         "bank row)")
+    ap.add_argument("--max-blocks", type=int, default=None,
+                    help="block-table width (--kv paged): caps per-request "
+                         "context at max_blocks*page_size tokens and bounds "
+                         "the XLA decode path's gathered KV view; default = "
+                         "the whole pool")
     args = ap.parse_args()
 
     # Mesh sizing must happen before the first jax backend touch, hence the
@@ -82,6 +103,8 @@ def main() -> None:
         cfg, params, max_slots=args.max_slots, cache_capacity=256,
         prefill_len=32, alpha=args.alpha, spec_len=args.spec_len,
         draft=draft, mesh=mesh, attn_pim=args.attn_pim,
+        kv_layout=args.kv, page_size=args.page_size,
+        max_blocks=args.max_blocks,
     )
     rng = np.random.default_rng(args.seed)
     for i, req in enumerate(generate_trace(args.task, args.requests,
@@ -96,6 +119,12 @@ def main() -> None:
     wall = sum(s.wall_s for s in eng.stats)
     print(f"tokens: {tok}  wall: {wall:.2f}s  tok/s: {tok / max(wall, 1e-9):.1f}")
     print(f"reschedules: {eng.scheduler.num_reschedules}")
+    if eng.kv is not None:
+        st = eng.kv.stats()
+        frag = max((s.kv_fragmentation for s in eng.stats), default=0.0)
+        print(f"kv pages: watermark {st.watermark}/{st.num_pages} "
+              f"({st.page_size} tokens/page), peak fragmentation "
+              f"{frag:.1%}")
     print("\niter  rlp tlp    AI  fc_path  new_toks")
     for s in eng.stats[:: max(len(eng.stats) // 20, 1)]:
         print(f"{s.iteration:5d} {s.rlp:4d} {s.tlp:3d} {s.ai_estimate:5.1f}  "

@@ -332,6 +332,47 @@ def decode_attention_xla(
     return out.reshape(b, t, nh, hd)
 
 
+def gather_kv_pages(pages: jax.Array, tables: jax.Array) -> jax.Array:
+    """Materialize a contiguous per-slot KV view from the page pool:
+    [num_pages, page, nkv, hd] gathered by [b, max_blocks] block tables ->
+    [b, max_blocks * page, nkv, hd].  This is the XLA decode path for the
+    paged cache (TLP>1 verify windows and the non-pim reference); the paged
+    Pallas kernel performs the same gather inside its index_map without
+    ever building this view."""
+    b, nblk = tables.shape
+    _, page, nkv, hd = pages.shape
+    g = jnp.take(pages, tables, axis=0)          # [b, nblk, page, nkv, hd]
+    return g.reshape(b, nblk * page, nkv, hd)
+
+
+def decode_attention_pim_paged(
+    q: jax.Array,        # [b, 1, nH, hd] — single-token decode only
+    k_pages: jax.Array,  # [num_pages, page, nKV, hd]
+    v_pages: jax.Array,  # [num_pages, page, nKV, hd]
+    tables: jax.Array,   # [b, max_blocks] int32 block tables
+    lens: jax.Array,     # [b] valid lengths (new token included)
+) -> jax.Array:
+    """Paged decode attention through the block-table Pallas kernel — the
+    Attn-PIM path over bank-row pages.  Under a mesh the kernel shard_maps
+    over KV heads exactly like the dense `decode_attention_pim` (tables and
+    lens replicate; each head shard holds the full page pool for its
+    heads)."""
+    from repro.kernels.paged_decode_attention import (
+        paged_decode_attention, paged_decode_attention_sharded)
+    b, t, nh, hd = q.shape
+    assert t == 1, "the flash-decode kernel verifies one token at a time"
+    nkv = k_pages.shape[2]
+    qh = q[:, 0].reshape(b, nkv, nh // nkv, hd)
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
+    mesh = current_mesh()
+    if mesh is not None:
+        out = paged_decode_attention_sharded(qh, k_pages, v_pages, lens,
+                                             tables, mesh=mesh)
+    else:
+        out = paged_decode_attention(qh, k_pages, v_pages, lens, tables)
+    return out.reshape(b, 1, nh, hd)
+
+
 def decode_attention_pim(
     q: jax.Array,        # [b, 1, nH, hd] — single-token decode only
     k_cache: jax.Array,  # [b, S, nKV, hd]

@@ -280,6 +280,59 @@ def cache_logical_axes(cfg: ModelConfig) -> PyTree:
     return axes
 
 
+def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
+                     page_size: int, max_blocks: int | None = None) -> PyTree:
+    """Paged decode cache: KV lives in a pool of fixed-size pages (one page
+    = one Attn-PIM bank row) instead of per-slot dense slabs, and a per-slot
+    block table maps logical KV blocks to physical pages.
+
+    Physical page 0 is the shared garbage page (never allocated — see
+    `serving/kv_pages.py`): block tables init to 0, so writes from
+    not-yet-admitted slots land there harmlessly.
+
+    Total KV bytes scale with `num_pages * page_size` for the whole pool,
+    not `max_slots * capacity` — and a single request may span (almost) the
+    entire pool, which no dense slot layout permits.
+    """
+    assert cfg.family in ("dense", "moe", "vlm", "audio"), (
+        f"paged KV cache needs a pure attention KV cache; {cfg.family} "
+        "carries SSM state that has no sequence dim to page")
+    if max_blocks is None:
+        max_blocks = num_pages - 1
+    dtype = jnp.dtype(cfg.dtype)
+    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "pos": jnp.zeros((max_slots,), jnp.int32),
+        "k": jnp.zeros((cfg.num_layers, num_pages, page_size, nkv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, num_pages, page_size, nkv, hd), dtype),
+        "block_tables": jnp.zeros((max_slots, max_blocks), jnp.int32),
+    }
+
+
+def paged_cache_logical_axes(cfg: ModelConfig) -> PyTree:
+    """Logical axes for the paged cache (mirrors init_paged_cache).  The
+    page-pool dim replicates; the KV-head dim carries the Attn-PIM unit
+    sharding (`serve_rules(attn_pim=True)` maps kv_heads -> model), so the
+    head-sharded flash-decode layout from the dense cache carries over."""
+    return {
+        "pos": (None,),
+        "k": ("scan", None, None, "kv_heads", None),
+        "v": ("scan", None, None, "kv_heads", None),
+        "block_tables": (None, None),
+    }
+
+
+def paged_cache_shardings(cfg: ModelConfig, max_slots: int, num_pages: int,
+                          page_size: int, max_blocks: int | None,
+                          rules, mesh) -> PyTree:
+    """NamedShardings for the paged cache under a rule table + mesh."""
+    from repro.distributed.sharding import tree_shardings
+    shapes = jax.eval_shape(
+        lambda: init_paged_cache(cfg, max_slots, num_pages, page_size,
+                                 max_blocks))
+    return tree_shardings(paged_cache_logical_axes(cfg), shapes, rules, mesh)
+
+
 # ===========================================================================
 # Blocks
 # ===========================================================================
@@ -290,6 +343,30 @@ def _write_kv(k_cache, v_cache, k_new, v_new, pos):
         return jax.lax.dynamic_update_slice(cache, new, (p, 0, 0))
     k_cache = jax.vmap(upd)(k_cache, k_new, pos)
     v_cache = jax.vmap(upd)(v_cache, v_new, pos)
+    return k_cache, v_cache
+
+
+def _paged_rows(pos, t, tables, page_size):
+    """(physical page, row) coordinates for t new tokens per slot.
+
+    Logical position `pos[b] + j` lands in logical block `(pos+j) //
+    page_size` at row `(pos+j) % page_size`; the block table resolves the
+    physical page.  Blocks past the table width clamp to the last entry —
+    the engine guarantees mapped coverage for every *live* slot, and idle
+    slots' tables are all garbage-page so their writes collide there
+    harmlessly (see serving/kv_pages.py)."""
+    tok = pos[:, None] + jnp.arange(t)[None, :]             # [b, t]
+    blk = jnp.clip(tok // page_size, 0, tables.shape[1] - 1)
+    phys = jnp.take_along_axis(tables, blk, axis=1)         # [b, t]
+    return phys, tok % page_size
+
+
+def _write_kv_paged(k_cache, v_cache, k_new, v_new, pos, tables):
+    """Scatter [b, t, nkv, hd] into the page pools [P, page, nkv, hd]."""
+    page_size = k_cache.shape[1]
+    phys, row = _paged_rows(pos, k_new.shape[1], tables, page_size)
+    k_cache = k_cache.at[phys, row].set(k_new)
+    v_cache = v_cache.at[phys, row].set(v_new)
     return k_cache, v_cache
 
 
@@ -313,6 +390,7 @@ def attention_block(
     kv: tuple[jax.Array, jax.Array] | None,
     pos: jax.Array | None,
     mode: str,                      # train | prefill | decode
+    tables: jax.Array | None = None,   # [b, max_blocks] => paged KV layout
 ):
     """Pre-norm attention sub-block.  Returns (h, new_kv|None)."""
     a_in = L.norm(h, p["norm1"], cfg.norm, cfg.norm_eps)
@@ -320,7 +398,25 @@ def attention_block(
                             cfg.resolved_head_dim)
     q, k = _apply_positional(cfg, q, k, positions)
     new_kv = None
-    if mode == "decode":
+    if mode == "decode" and tables is not None:
+        # paged layout: kv are page pools [num_pages, page, nkv, hd]
+        assert kv is not None and pos is not None
+        k_cache, v_cache = _write_kv_paged(kv[0], kv[1], k, v, pos, tables)
+        t = q.shape[1]
+        if L.current_attn_impl() == "pim" and t == 1:
+            # the paged flash-decode kernel gathers pages via its
+            # block-table index_map — no contiguous view materialized
+            attn = L.decode_attention_pim_paged(q, k_cache, v_cache, tables,
+                                                lens=pos + 1)
+        else:
+            # XLA path: gather the slots' pages into a contiguous view and
+            # reuse the dense ragged-masked attention
+            kg = L.gather_kv_pages(k_cache, tables)
+            vg = L.gather_kv_pages(v_cache, tables)
+            attn = L.decode_attention_xla(q, kg, vg,
+                                          cache_len=pos + t, q_offset=pos)
+        new_kv = (k_cache, v_cache)
+    elif mode == "decode":
         assert kv is not None and pos is not None
         k_cache, v_cache = _write_kv(kv[0], kv[1], k, v, pos)
         t = q.shape[1]
@@ -383,6 +479,9 @@ def _transformer_backbone(cfg, params, h, positions, cache, mode, remat):
     """
     use_cache = cache is not None
     pos = cache["pos"] if use_cache else None
+    # paged layout marker: the per-layer kv rides the scan carry either way,
+    # shaped [slots, S, ...] dense or [num_pages, page, ...] paged
+    tables = cache.get("block_tables") if use_cache else None
 
     aux0 = jnp.zeros((), jnp.float32)
     if use_cache:
@@ -391,7 +490,7 @@ def _transformer_backbone(cfg, params, h, positions, cache, mode, remat):
             kc = jax.lax.dynamic_index_in_dim(kfull, i, 0, keepdims=False)
             vc = jax.lax.dynamic_index_in_dim(vfull, i, 0, keepdims=False)
             h, new_kv = attention_block(cfg, lp, h, positions, (kc, vc),
-                                        pos, mode)
+                                        pos, mode, tables=tables)
             kfull = jax.lax.dynamic_update_slice_in_dim(
                 kfull, new_kv[0][None], i, 0)
             vfull = jax.lax.dynamic_update_slice_in_dim(
@@ -678,6 +777,49 @@ def prefill_to_slots(cfg, params, batch, cache, src):
             cache[key] = merge_head(cache[key], tmp[key])
     if "ssm" in cache:
         cache["ssm"] = jax.tree.map(merge, cache["ssm"], tmp["ssm"])
+    cache["pos"] = jnp.where(keep, cache["pos"], jnp.take(tmp["pos"], take))
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [n]
+    first_slots = jnp.where(keep, -1, jnp.take(first, take))
+    return first_slots, cache
+
+
+def prefill_to_pages(cfg, params, batch, cache, src):
+    """Batched admission into the PAGED cache: prefill a fixed-shape batch
+    and scatter each admitted request's prompt KV onto its block-table
+    pages — one compiled call per admission wave, same contract as
+    `prefill_to_slots`.
+
+    batch/src: as in `prefill_to_slots` (src[s] = prefill row admitted into
+    slot s, or -1).  cache: a paged cache from `init_paged_cache`, whose
+    `block_tables` rows for admitted slots already map enough pages to hold
+    the prompt (the engine's allocator guarantees this before calling).
+
+    Rows the mask rejects — padding slots and positions past a prompt's
+    length — are redirected to the shared garbage page 0, so the scatter
+    stays fixed-shape without ever touching live pages.
+    """
+    n, p_len = batch["tokens"].shape
+    slots, max_blocks = cache["block_tables"].shape
+    page_size = cache["k"].shape[2]
+    tmp = init_cache(cfg, n, p_len)
+    logits, tmp = prefill(cfg, params, batch, tmp)
+
+    take = jnp.clip(src, 0)                       # [slots] row gather index
+    keep = src < 0                                # [slots] untouched slots
+    tables = cache["block_tables"]
+
+    tok = jnp.broadcast_to(jnp.arange(p_len)[None, :], (slots, p_len))
+    lens = jnp.take(batch["prompt_lens"], take)                  # [slots]
+    valid = (~keep)[:, None] & (tok < lens[:, None])             # [slots, P]
+    blk = jnp.clip(tok // page_size, 0, max_blocks - 1)
+    phys = jnp.take_along_axis(tables, blk, axis=1)              # [slots, P]
+    phys = jnp.where(valid, phys, 0)              # rejected rows -> garbage
+    row = tok % page_size
+
+    cache = dict(cache)
+    for key in ("k", "v"):
+        new = jnp.take(tmp[key], take, axis=1)    # [L, slots, P, nkv, hd]
+        cache[key] = cache[key].at[:, phys, row].set(new)
     cache["pos"] = jnp.where(keep, cache["pos"], jnp.take(tmp["pos"], take))
     first = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [n]
     first_slots = jnp.where(keep, -1, jnp.take(first, take))

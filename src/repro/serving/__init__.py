@@ -1,5 +1,8 @@
 from repro.serving.engine import IterStats, PapiEngine, ServeRequest, ServeResult
+from repro.serving.kv_pages import (BlockTables, PageAllocator, PagedKVManager,
+                                    PageStats)
 from repro.serving.sampler import greedy, sample
 
-__all__ = ["IterStats", "PapiEngine", "ServeRequest", "ServeResult",
+__all__ = ["BlockTables", "IterStats", "PageAllocator", "PagedKVManager",
+           "PageStats", "PapiEngine", "ServeRequest", "ServeResult",
            "greedy", "sample"]

@@ -17,6 +17,26 @@ Slots are fixed-capacity (static shapes: the decode step is compiled once
 per TLP value).  Inactive slots decode garbage that is masked out — the
 standard padded-batch serving trade.
 
+KV layouts (``kv_layout=``)
+---------------------------
+``"dense"`` (default): one `(layers, max_slots, cache_capacity, ...)` slab;
+every request pre-reserves a full uniform slot, so per-request context is
+capped at `cache_capacity` and short requests strand the rest of theirs.
+
+``"paged"``: the Attn-PIM bank-row layout.  KV lives in a pool of
+fixed-size pages (`models.init_paged_cache`), per-slot block tables map
+logical KV blocks to physical pages, and `serving.kv_pages.PagedKVManager`
+runs admission on a PAGE budget: a request enters iff pages for
+`prompt + max_new_tokens + spec_len` are available (reserved up front,
+mapped lazily as the sequence grows, returned on speculative rewind, freed
+on finish).  A single request may span nearly the whole pool — context
+length is bounded by pooled memory, not a per-slot slab.  Decode attention
+either gathers pages into the XLA path or — with ``attn_pim=True`` — runs
+the block-table Pallas kernel (`kernels.paged_decode_attention`), which
+resolves pages inside its index_map.  Token streams are identical to the
+dense engine on any workload both can hold (tested).  Per-iteration pool
+stats (pages used/free, watermark, fragmentation) ride on `IterStats`.
+
 Device-resident hot path
 ------------------------
 PAPI's premise is that the per-iteration scheduling decision is O(1) and a
@@ -90,6 +110,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import Any, Sequence
 
@@ -101,9 +122,11 @@ from repro.configs.base import ModelConfig
 from repro.core.scheduler import PapiScheduler
 from repro.distributed.sharding import axis_rules, serve_rules
 from repro.models import (cache_shardings, decode_step, init_cache,
-                          param_shardings, prefill_to_slots)
+                          init_paged_cache, paged_cache_shardings,
+                          param_shardings, prefill_to_pages, prefill_to_slots)
 from repro.models.layers import attn_impl
 from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
+from repro.serving.kv_pages import PagedKVManager
 from repro.serving.sampler import accept_speculative, greedy
 
 
@@ -121,6 +144,7 @@ class ServeResult:
     prompt_len: int
     iterations: int
     finished_reason: str = "length"
+    prompt_truncated: bool = False   # prompt exceeded the prefill window
 
 
 @dataclasses.dataclass
@@ -134,6 +158,11 @@ class IterStats:
     accepted: float        # mean accepted tokens per active slot (spec dec)
     wall_s: float
     transfers: int = 0     # device->host sync round-trips this iteration
+    # paged KV layout only (zeros under the dense layout):
+    kv_pages_used: int = 0       # pages holding live KV right now
+    kv_pages_free: int = 0       # pages on the free list
+    kv_page_watermark: int = 0   # peak pages used over the engine lifetime
+    kv_fragmentation: float = 0.0  # tail-of-page waste share of mapped rows
 
 
 class PapiEngine:
@@ -163,8 +192,13 @@ class PapiEngine:
         mesh: Any | None = None,
         rules: dict | None = None,
         attn_pim: bool = False,
+        kv_layout: str = "dense",
+        page_size: int = 16,
+        num_pages: int | None = None,
+        max_blocks: int | None = None,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
+        assert kv_layout in ("dense", "paged"), kv_layout
         self.cfg, self.params = cfg, params
         self.max_slots = max_slots
         self.capacity = cache_capacity
@@ -174,47 +208,82 @@ class PapiEngine:
         self.pim_interpret = pim_interpret
         self.fused = fused
         self.mesh = mesh
+        self.kv_layout = kv_layout
         # attn_pim stores the KV cache head-sharded instead of seq-sharded so
         # the flash-decode kernel's per-KV-shard units match the resident
-        # layout (no per-step resharding) — see serve_rules(attn_pim=True)
+        # layout (no per-step resharding) — see serve_rules(attn_pim=True).
+        # The paged layout always takes the head-sharded rules under a mesh:
+        # its pool dim replaced the sequence dim and physical page ids index
+        # the whole pool, so KV heads are the only dim that can divide the
+        # pools across devices (seq-sharded rules would silently replicate
+        # the entire pool on every device).
         self.rules = (dict(rules) if rules is not None
-                      else (serve_rules(attn_pim=attn_pim)
+                      else (serve_rules(attn_pim=attn_pim
+                                        or kv_layout == "paged")
                             if mesh is not None else None))
         self.attn_pim = attn_pim
         self.scheduler = PapiScheduler(cfg, alpha=alpha, tlp=spec_len,
                                        eos_token=eos_token)
         self.scheduler.initial_schedule(0, spec_len)
 
-        self.cache = init_cache(cfg, max_slots, cache_capacity)
+        self.kv: PagedKVManager | None = None
+        if kv_layout == "paged":
+            # default pool: the same KV bytes the dense layout would hold
+            # (max_slots dense slots of cache_capacity), plus the garbage
+            # page — but pooled, so ONE request may span nearly all of it
+            if num_pages is None:
+                num_pages = max(max_slots * cache_capacity // page_size, 1) + 1
+            # max_blocks bounds the block-table width: per-request context
+            # AND the width of the XLA path's gathered KV view (which pays
+            # for max_blocks * page_size per slot per step regardless of
+            # live length).  Default None = the whole usable pool, i.e. one
+            # request may span nearly all of it; cap it when serving many
+            # short requests from a large pool.
+            self.kv = PagedKVManager(num_pages=num_pages, page_size=page_size,
+                                     max_slots=max_slots,
+                                     max_blocks=max_blocks)
+            self.cache = init_paged_cache(cfg, max_slots, num_pages,
+                                          page_size, self.kv.max_blocks)
+        else:
+            self.cache = init_cache(cfg, max_slots, cache_capacity)
         if mesh is not None:
             self.params = jax.device_put(
                 self.params, param_shardings(cfg, self.rules, mesh))
             self.cache = jax.device_put(
-                self.cache,
-                cache_shardings(cfg, max_slots, cache_capacity, self.rules,
-                                mesh))
+                self.cache, self._cache_shardings(cfg))
         # per-slot host state
         self.slot_req: list[ServeRequest | None] = [None] * max_slots
         self.slot_tokens: list[list[int]] = [[] for _ in range(max_slots)]
         self.slot_last: np.ndarray = np.zeros(max_slots, np.int32)
+        # prompt tokens actually prefilled per slot: with the paged layout
+        # the device cache position of a live slot is
+        # slot_prompt[s] + len(slot_tokens[s]) - 1 (see _slot_pos)
+        self.slot_prompt: np.ndarray = np.zeros(max_slots, np.int32)
         self.queue: list[ServeRequest] = []
         self.results: list[ServeResult] = []
         self.stats: list[IterStats] = []
         self.iteration = 0
         self.host_transfers = 0
+        self._warned_truncation = False
 
         if draft is not None:
             self.draft_cfg, self.draft_params = draft
-            self.draft_cache = init_cache(self.draft_cfg, max_slots,
-                                          cache_capacity)
+            if self.kv is not None:
+                # the draft's KV lives at the same logical positions, so it
+                # pages through the SAME allocator + block tables (shared
+                # geometry, per-model page contents)
+                self.draft_cache = init_paged_cache(
+                    self.draft_cfg, max_slots, num_pages, page_size,
+                    self.kv.max_blocks)
+            else:
+                self.draft_cache = init_cache(self.draft_cfg, max_slots,
+                                              cache_capacity)
             if mesh is not None:
                 self.draft_params = jax.device_put(
                     self.draft_params,
                     param_shardings(self.draft_cfg, self.rules, mesh))
                 self.draft_cache = jax.device_put(
-                    self.draft_cache,
-                    cache_shardings(self.draft_cfg, max_slots,
-                                    cache_capacity, self.rules, mesh))
+                    self.draft_cache, self._cache_shardings(self.draft_cfg))
         else:
             self.draft_cfg = self.draft_params = self.draft_cache = None
 
@@ -237,6 +306,34 @@ class PapiEngine:
         return self.results
 
     # ------------------------------------------------------------- internals
+    def _cache_shardings(self, cfg: ModelConfig):
+        if self.kv is not None:
+            return paged_cache_shardings(
+                cfg, self.max_slots, self.kv.alloc.num_pages + 1,
+                self.kv.page_size, self.kv.max_blocks, self.rules, self.mesh)
+        return cache_shardings(cfg, self.max_slots, self.capacity,
+                               self.rules, self.mesh)
+
+    def _slot_pos(self, s: int) -> int:
+        """Device cache position of live slot s (tokens of KV written).  The
+        first output token comes from prefill, so its KV is written by the
+        NEXT decode step: pos = prompt + generated - 1."""
+        return int(self.slot_prompt[s]) + len(self.slot_tokens[s]) - 1
+
+    def _sync_tables(self) -> None:
+        """Push the host block tables into the cache pytrees the jitted
+        steps consume.  `BlockTables.device()` caches until a row mutates,
+        so this is an identity check + dict store on the no-change path."""
+        if self.kv is None:
+            return
+        tables = self.kv.tables.device()
+        if self.cache["block_tables"] is not tables:
+            self.cache = dict(self.cache)
+            self.cache["block_tables"] = tables
+            if self.draft_cache is not None:
+                self.draft_cache = dict(self.draft_cache)
+                self.draft_cache["block_tables"] = tables
+
     def _fetch(self, *arrays):
         """Single device->host sync round-trip (counted).  Sharded arrays
         gather here — still one round trip from the host's point of view."""
@@ -333,7 +430,8 @@ class PapiEngine:
         # a caller-wrapped engine never reuses a stale executable
         key = (which, current_fc_variant(), current_fc_interpret())
         if key not in self._prefill_jit:
-            self._prefill_jit[key] = jax.jit(partial(prefill_to_slots, cfg))
+            fn = prefill_to_pages if self.kv is not None else prefill_to_slots
+            self._prefill_jit[key] = jax.jit(partial(fn, cfg))
         return self._prefill_jit[key]
 
     def _admit(self) -> int:
@@ -351,20 +449,63 @@ class PapiEngine:
             if not (instant_finish and self.queue):
                 return admitted
 
+    def _note_truncation(self, req: ServeRequest) -> bool:
+        """Record (and warn once) when a prompt exceeds the prefill window —
+        the window keeps the LAST prefill_len tokens and silently dropping
+        the head is a correctness hazard the caller must be able to see."""
+        if len(req.prompt) <= self.prefill_len:
+            return False
+        if not self._warned_truncation:
+            warnings.warn(
+                f"prompt of request {req.req_id} ({len(req.prompt)} tokens) "
+                f"exceeds prefill_len={self.prefill_len}; keeping the last "
+                f"{self.prefill_len} tokens (ServeResult.prompt_truncated "
+                "is set; further truncations warn silently)",
+                stacklevel=3)
+            self._warned_truncation = True
+        return True
+
     def _admit_wave(self) -> tuple[int, bool]:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         batch_rows: list[tuple[int, ServeRequest]] = []
+        window = max(self.spec_len, 1)
         while self.queue and free:
-            req = self.queue.pop(0)
+            req = self.queue[0]
             p = min(len(req.prompt), self.prefill_len)
+            if self.kv is not None:
+                # page-budgeted admission: a request enters iff pages for
+                # prompt + max_new_tokens + a speculative window are
+                # available (reserved up front, mapped lazily); per-request
+                # length is bounded by the POOL, not a per-slot slab
+                cap = self.kv.max_context - p - window
+                if cap < 1:
+                    self.queue.pop(0)
+                    self.results.append(ServeResult(
+                        req.req_id, [], len(req.prompt), self.iteration,
+                        "rejected", self._note_truncation(req),
+                    ))
+                    continue
+                want = max(1, min(req.max_new_tokens, cap))
+                if not self.kv.can_admit(p + want + window):
+                    # pool busy — the reservation math guarantees this
+                    # clears once running requests finish, so defer (the
+                    # queue keeps order) instead of rejecting
+                    break
+                self.queue.pop(0)
+                req.max_new_tokens = want
+                slot = free.pop(0)
+                self.kv.admit(slot, p + want + window, p)
+                batch_rows.append((slot, req))
+                continue
+            self.queue.pop(0)
             # never let a request outgrow its slot's KV capacity: the budget
             # reserves a full speculative window past the last new token
-            budget = self.capacity - p - max(self.spec_len, 1)
+            budget = self.capacity - p - window
             if budget < 1:
                 # cannot emit even one token without overflowing the slot
                 self.results.append(ServeResult(
                     req.req_id, [], len(req.prompt), self.iteration,
-                    "rejected",
+                    "rejected", self._note_truncation(req),
                 ))
                 continue
             req.max_new_tokens = max(1, min(req.max_new_tokens, budget))
@@ -380,9 +521,11 @@ class PapiEngine:
             tokens[row, :p] = req.prompt[-self.prefill_len:][:p]
             lens[row] = p
             src[slot] = row
+            self.slot_prompt[slot] = p
         batch = {"tokens": jnp.asarray(tokens),
                  "prompt_lens": jnp.asarray(lens)}
         src_dev = jnp.asarray(src)
+        self._sync_tables()   # paged: admitted rows just mapped their pages
         with self._scope():
             first, self.cache = self._get_prefill("main")(
                 self.params, batch, self.cache, src_dev)
@@ -402,9 +545,11 @@ class PapiEngine:
                 reason = "eos" if tok == self.eos_token else "length"
                 self.results.append(ServeResult(
                     req.req_id, [tok], len(req.prompt), self.iteration,
-                    reason,
+                    reason, self._note_truncation(req),
                 ))
                 self.slot_last[slot] = 0   # slot stays available
+                if self.kv is not None:
+                    self.kv.release(slot)
                 instant_finish = True
             else:
                 self.slot_req[slot] = req
@@ -498,6 +643,17 @@ class PapiEngine:
             self.scheduler.observe_counts(0, admitted)
             return
 
+        speculating = self.spec_len > 1 and self.draft_cfg is not None
+        if self.kv is not None:
+            # map pages for the KV this iteration writes (positions
+            # pos..pos+tlp-1).  Cannot fail: the admission reservation
+            # covers prompt + max_new + window, and coverage never exceeds
+            # it before the request finishes.
+            tlp = self.spec_len if speculating else 1
+            for s in active:
+                self.kv.ensure(s, self._slot_pos(s) + tlp)
+            self._sync_tables()
+
         # the eos flags in the bundle are a device-side convenience for
         # callers (launch.serve); the host loop below re-derives finishes
         # anyway since length-based finishes need per-request budgets
@@ -520,16 +676,26 @@ class PapiEngine:
                     reason = "eos" if tok == self.eos_token else "length"
                     self.results.append(ServeResult(
                         req.req_id, self.slot_tokens[s], len(req.prompt),
-                        self.iteration, reason,
+                        self.iteration, reason, self._note_truncation(req),
                     ))
                     self.slot_req[s] = None
                     finished_flags[s] = True
                     break
             else:
                 self.slot_last[s] = self.slot_tokens[s][-1]
+                if self.kv is not None and speculating and (
+                        n_acc < self.spec_len):
+                    # speculative rollback returned the cache position to
+                    # the accepted prefix; pages past it hold only the
+                    # rejected window tail — return them to the pool (the
+                    # admission reservation keeps them claimable, so next
+                    # iteration's ensure() re-maps without risk)
+                    self.kv.rewind(s, self._slot_pos(s))
                 continue
             # slot freed: park its position on a safe nonzero value
             self.slot_last[s] = 0
+            if self.kv is not None:
+                self.kv.release(s)
 
         # park inactive slots at pos=1 so their garbage decode can't creep
         # past the cache capacity (they are masked from outputs anyway).
@@ -548,6 +714,15 @@ class PapiEngine:
         # flags go to the scheduler as an array — it sums them itself.
         self.scheduler.observe_counts(finished_flags, admitted)
         self.iteration += 1
+        kv_used = kv_free = kv_peak = 0
+        kv_frag = 0.0
+        if self.kv is not None:
+            live_tokens = sum(self._slot_pos(s)
+                              for s in range(self.max_slots)
+                              if self.slot_req[s] is not None)
+            ps = self.kv.stats(live_tokens)
+            kv_used, kv_free = ps.mapped, ps.free
+            kv_peak, kv_frag = ps.watermark, ps.fragmentation
         self.stats.append(IterStats(
             iteration=self.iteration,
             rlp=self.scheduler.rlp,
@@ -558,9 +733,50 @@ class PapiEngine:
             accepted=float(np.mean(accepted[active])) if len(active) else 0.0,
             wall_s=time.perf_counter() - t0,
             transfers=self.host_transfers - transfers0,
+            kv_pages_used=kv_used,
+            kv_pages_free=kv_free,
+            kv_page_watermark=kv_peak,
+            kv_fragmentation=kv_frag,
         ))
 
     def set_spec_len(self, tlp: int) -> None:
-        """Host updates the TLP register (dynamic speculation length)."""
+        """Host updates the TLP register (dynamic speculation length).
+
+        Paged layout: every live request's admission reservation covered
+        `prompt + max_new + OLD window` pages, so widening the window must
+        re-budget them or the per-iteration `ensure()` could exhaust the
+        pool mid-flight.  If the free pool cannot cover the wider window
+        for every live slot, the window is clamped to the widest value it
+        can (narrower is always affordable) — the scheduler simply gets a
+        smaller TLP than it asked for this cycle.
+        """
+        if self.kv is not None and tlp != self.spec_len:
+            tlp = self._rebudget_spec_window(tlp)
         self.spec_len = tlp
         self.scheduler.set_tlp(tlp)
+
+    def _rebudget_spec_window(self, tlp: int) -> int:
+        """Adjust live slots' page reservations from the current speculative
+        window to `tlp`'s; returns the (possibly clamped) window every live
+        slot can actually hold — bounded by BOTH the free pool and the
+        block-table width (a slot admitted near `max_blocks * page_size`
+        tokens has no table rows left for a wider window)."""
+        old_win = max(self.spec_len, 1)
+        live = [s for s in range(self.max_slots)
+                if self.slot_req[s] is not None]
+
+        def budget(s: int, win: int) -> int:
+            base = int(self.slot_prompt[s]) + self.slot_req[s].max_new_tokens
+            return self.kv.pages_for(base + win)
+
+        def delta(s: int, new_win: int) -> int:
+            return budget(s, new_win) - budget(s, old_win)
+
+        want = max(tlp, 1)
+        while want > old_win and (
+                sum(delta(s, want) for s in live) > self.kv.alloc.available
+                or any(budget(s, want) > self.kv.max_blocks for s in live)):
+            want -= 1
+        for s in live:
+            self.kv.alloc.reserve_more(s, delta(s, want))
+        return want if want != max(tlp, 1) else tlp

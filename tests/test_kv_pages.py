@@ -1,0 +1,218 @@
+"""Property tests for the paged KV allocator (serving/kv_pages.py).
+
+Run with hypothesis when installed, with the deterministic fallback sampler
+otherwise (see tests/_propcompat.py).  The core claims:
+
+  * arbitrary admit/grow/rewind/release interleavings never map one
+    physical page to two owners, never leak pages, and never let the
+    reservation total exceed the free pool (so grow() can't fail);
+  * block-table rows always mirror the allocator exactly: mapped pages as
+    the prefix, the garbage page everywhere else, page 0 never mapped;
+  * a drained pool is indistinguishable from a fresh one.
+"""
+import numpy as np
+import pytest
+
+from _propcompat import given, settings, st
+from repro.serving.kv_pages import (GARBAGE_PAGE, BlockTables, PageAllocator,
+                                    PagedKVManager, pages_for)
+
+MAX_SLOTS = 4
+
+
+def _decode_op(x: int) -> tuple[int, int, int]:
+    """Map one drawn integer onto (op, slot, tokens) — keeps the strategy
+    surface to plain integer lists, which both hypothesis and the fallback
+    sampler provide."""
+    return x % 4, (x // 4) % MAX_SLOTS, (x // 16) % 120 + 1
+
+
+def _apply(mgr: PagedKVManager, live: dict, x: int) -> None:
+    op, slot, tokens = _decode_op(x)
+    if op == 0 and slot not in live:                      # admit
+        if mgr.can_admit(tokens):
+            mgr.admit(slot, tokens, max(1, tokens // 2))
+            live[slot] = tokens
+    elif op == 1 and slot in live:                        # grow coverage
+        mgr.ensure(slot, min(tokens, live[slot]))
+    elif op == 2 and slot in live:                        # speculative rewind
+        mgr.rewind(slot, tokens)
+    elif op == 3 and slot in live:                        # finish
+        mgr.release(slot)
+        live.pop(slot)
+
+
+def _check_tables(mgr: PagedKVManager, live: dict) -> None:
+    for s in range(MAX_SLOTS):
+        pages = mgr.alloc.pages_of(s)
+        row = mgr.tables.host[s]
+        assert list(row[:len(pages)]) == pages
+        assert all(int(e) == GARBAGE_PAGE for e in row[len(pages):])
+        if s not in live:
+            assert not pages
+    mapped = [p for s in live for p in mgr.alloc.pages_of(s)]
+    assert GARBAGE_PAGE not in mapped, "garbage page must never be mapped"
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(0, 2**20), min_size=0, max_size=60))
+def test_allocator_invariants_under_random_ops(ops):
+    mgr = PagedKVManager(num_pages=25, page_size=8, max_slots=MAX_SLOTS)
+    live: dict[int, int] = {}
+    for x in ops:
+        _apply(mgr, live, x)
+        mgr.alloc.check()
+        _check_tables(mgr, live)
+    for s in list(live):
+        mgr.release(s)
+    mgr.alloc.check()
+    assert mgr.alloc.mapped_count == 0
+    assert mgr.alloc.reserved_unmapped == 0
+    assert mgr.alloc.free_count == mgr.alloc.num_pages
+    assert (mgr.tables.host == GARBAGE_PAGE).all()
+
+
+@settings(max_examples=20)
+@given(st.lists(st.integers(0, 2**20), min_size=0, max_size=40),
+       st.integers(1, 16), st.integers(6, 40))
+def test_allocator_invariants_across_geometries(ops, page_size, num_pages):
+    mgr = PagedKVManager(num_pages=num_pages, page_size=page_size,
+                         max_slots=MAX_SLOTS)
+    live: dict[int, int] = {}
+    for x in ops:
+        _apply(mgr, live, x)
+        mgr.alloc.check()
+    for s in list(live):
+        mgr.release(s)
+    mgr.alloc.check()
+    assert mgr.alloc.free_count == mgr.alloc.num_pages
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 1     # an owner always holds >= 1 page
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(17, 8) == 3
+
+
+def test_admission_headroom_accounts_for_reservations():
+    """Reserved-but-unmapped pages must be invisible to later admissions —
+    otherwise a running request's grow() could fail mid-flight."""
+    a = PageAllocator(10, 4)
+    a.admit(0, budget_pages=8, initial_pages=2)   # 6 reserved unmapped
+    assert a.free_count == 8
+    assert a.available == 2
+    assert a.can_admit(2) and not a.can_admit(3)
+    # the reservation is really claimable: grow to the full budget
+    a.grow(0, 6)
+    assert a.free_count == 2 and a.reserved_unmapped == 0
+    a.check()
+
+
+def test_rewind_keeps_reservation_claimable():
+    a = PageAllocator(8, 4)
+    a.admit(0, budget_pages=6, initial_pages=6)
+    freed = a.rewind(0, keep_pages=2)
+    assert len(freed) == 4
+    assert a.free_count == 6
+    # the 4 freed pages stay promised to owner 0:
+    assert a.available == 2
+    assert not a.can_admit(3)
+    again = a.grow(0, 4)                  # guaranteed to succeed
+    assert set(again) <= set(freed) | set(range(8))
+    a.check()
+
+
+def test_grow_beyond_reservation_draws_uncommitted_headroom():
+    """A widened speculative window may need more than was reserved; the
+    overage comes from uncommitted pages only and can fail cleanly."""
+    a = PageAllocator(10, 4)
+    a.admit(0, budget_pages=3, initial_pages=3)
+    a.admit(1, budget_pages=5, initial_pages=1)   # 4 reserved
+    # free = 6, reserved = 4 -> owner 0 may overdraw at most 2
+    a.grow(0, 2)
+    with pytest.raises(MemoryError):
+        a.grow(0, 1)
+    a.check()
+
+
+def test_reserve_more_widens_and_shrinks_reservations():
+    """Mid-flight re-budgeting (the engine's set_spec_len under the paged
+    layout): widening draws on uncommitted headroom only and fails cleanly;
+    shrinking clamps at zero even when mapped pages already exceed the new
+    budget."""
+    a = PageAllocator(10, 4)
+    a.admit(0, budget_pages=4, initial_pages=2)   # 2 reserved
+    a.admit(1, budget_pages=4, initial_pages=4)   # 0 reserved
+    assert a.available == 2
+    a.reserve_more(0, 2)                          # widen into headroom
+    assert a.available == 0 and a.reserved_unmapped == 4
+    with pytest.raises(MemoryError):
+        a.reserve_more(1, 1)                      # nothing uncommitted left
+    a.grow(0, 4)                                  # full widened budget lands
+    a.reserve_more(0, -3)                         # shrink clamps at zero
+    assert a.reserved_unmapped == 0
+    a.check()
+
+
+def test_finish_releases_everything():
+    a = PageAllocator(6, 4)
+    a.admit(7, budget_pages=5, initial_pages=3)
+    a.finish(7)
+    assert a.free_count == 6 and a.reserved_unmapped == 0
+    assert a.owners() == []
+    a.check()
+
+
+def test_admit_over_capacity_raises():
+    a = PageAllocator(4, 4)
+    with pytest.raises(MemoryError):
+        a.admit(0, budget_pages=5, initial_pages=1)
+
+
+def test_fragmentation_and_watermark():
+    a = PageAllocator(10, page_size=8)
+    a.admit(0, budget_pages=4, initial_pages=3)   # 24 rows mapped
+    assert a.stats(used_tokens=18).fragmentation == pytest.approx(0.25)
+    assert a.stats(used_tokens=24).fragmentation == 0.0
+    assert a.watermark == 3
+    a.rewind(0, keep_pages=1)
+    assert a.watermark == 3                       # watermark is a peak
+    a.grow(0, 3)
+    assert a.watermark == 4
+
+
+def test_block_tables_device_cache_invalidates_on_mutation():
+    t = BlockTables(2, 4)
+    d0 = t.device()
+    assert d0 is t.device()                       # cached while clean
+    t.set_row(1, [5, 6])
+    d1 = t.device()
+    assert d1 is not d0
+    assert np.asarray(d1)[1].tolist() == [5, 6, GARBAGE_PAGE, GARBAGE_PAGE]
+    t.clear_row(1)
+    assert np.asarray(t.device())[1].tolist() == [GARBAGE_PAGE] * 4
+
+
+def test_manager_clamps_table_width_to_pool():
+    """max_blocks wider than the usable pool would admit budgets the
+    allocator can never satisfy even when fully drained — the request
+    would defer forever (engine livelock).  The manager clamps."""
+    m = PagedKVManager(num_pages=9, page_size=8, max_slots=2, max_blocks=100)
+    assert m.max_blocks == 8
+    assert m.max_context == 64
+    # ... and the actual table is the clamped width too (a wider device
+    # table would re-inflate the gathered KV view the cap exists to bound)
+    assert m.tables.max_blocks == 8
+    # every budget that passes the table-width check is admissible from a
+    # drained pool
+    assert m.can_admit(m.max_context)
+
+
+def test_manager_reserves_garbage_page():
+    mgr = PagedKVManager(num_pages=5, page_size=4, max_slots=2)
+    assert mgr.alloc.num_pages == 4               # page 0 excluded
+    mgr.admit(0, 16, 16)                          # map everything usable
+    assert GARBAGE_PAGE not in mgr.alloc.pages_of(0)
+    assert sorted(mgr.alloc.pages_of(0)) == [1, 2, 3, 4]

@@ -158,6 +158,62 @@ def test_attn_pim_engine_sharded_matches_unsharded(small_model):
 
 
 @needs8
+def test_paged_engine_sharded_matches_unsharded(small_model):
+    """Paged KV + KV-head sharding: the paged engine under a (1, 2) mesh
+    with the block-table Pallas kernel (one Attn-PIM unit per KV-head
+    shard, pages resolved in the index_map) emits the same tokens as the
+    unsharded paged engine AND the unsharded dense engine."""
+    cfg, params = small_model
+    want, _ = _run(cfg, params, REQS[:3])
+    paged, _ = _run(cfg, params, REQS[:3], kv_layout="paged", page_size=16,
+                    attn_pim=True)
+    sharded, eng = _run(cfg, params, REQS[:3], kv_layout="paged",
+                        page_size=16, attn_pim=True, mesh=_mesh(1, 2))
+    assert eng.mesh is not None and eng.kv is not None
+    assert paged == want
+    assert sharded == want
+
+
+@needs8
+def test_paged_engine_sharded_xla_path_matches_unsharded(small_model):
+    """Paged + mesh WITHOUT attn_pim: the pool dim cannot shard (physical
+    page ids index the whole pool), so the engine must still store the
+    pools head-sharded — the default rules under a mesh switch to the
+    attn_pim table for any paged engine — and the XLA page-gather decode
+    path must emit the same tokens as the unsharded engines."""
+    from repro.distributed.sharding import serve_rules
+    cfg, params = small_model
+    want, _ = _run(cfg, params, REQS[:3])
+    got, eng = _run(cfg, params, REQS[:3], kv_layout="paged", page_size=16,
+                    mesh=_mesh(1, 2))
+    assert got == want
+    assert eng.rules == serve_rules(attn_pim=True)
+
+
+@needs8
+def test_paged_decode_attention_sharded_bit_identical():
+    """The paged kernel shard_mapped over KV heads (tables/lens replicated,
+    page pools split on the head dim) must be BIT-identical to the
+    unsharded paged kernel."""
+    from repro.kernels import (paged_decode_attention,
+                               paged_decode_attention_sharded)
+    b, nkv, g, hd, page, nblk = 2, 8, 2, 32, 16, 4
+    num_pages = b * nblk + 1
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, nkv, g, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, page, nkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, page, nkv, hd), jnp.float32)
+    lens = jnp.asarray([37, 64], jnp.int32)
+    tables = jnp.asarray(
+        np.arange(1, num_pages).reshape(b, nblk), jnp.int32)
+    mesh = _mesh(1, 8)
+    got = paged_decode_attention_sharded(q, kp, vp, lens, tables, mesh=mesh,
+                                         interpret=True)
+    want = paged_decode_attention(q, kp, vp, lens, tables, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@needs8
 def test_sharded_fc_gemv_col_banks_bit_identical():
     """Column-split FC-PIM banks concatenate without any cross-bank
     reduction — bit-identical to the single-bank kernel."""
