@@ -33,9 +33,19 @@ speculative workload.  The section merges into BENCH_engine.json under a
 "paged" key and the run exits 1 if the paged token streams diverge from
 the dense engine's — the same identity gate as ``--mesh``.
 
+``--long-prompt`` A/Bs chunked admission against the one-shot window: the
+same engine code runs long prompts (up to 6x) through an 8-token prefill
+window (chunk waves via `models.prefill_chunk`) and through a 128-token
+window that holds every prompt one-shot — the pre-chunking admission path.
+The section merges under a "long_prompt" key and the run exits 1 unless
+every token stream (a short <= window prompt included) is bit-identical
+across the two: chunking must change compile-shape economics, never
+tokens.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
         PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
         PYTHONPATH=src python benchmarks/engine_hotpath.py --kv paged
+        PYTHONPATH=src python benchmarks/engine_hotpath.py --long-prompt
 """
 from __future__ import annotations
 
@@ -52,18 +62,20 @@ ROOT = Path(__file__).resolve().parent.parent
 
 def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
                n_requests: int = 6, max_new: int = 20, mesh=None,
-               max_new_fn=None, eos_token: int = 1, **engine_kw):
+               max_new_fn=None, eos_token: int = 1, prefill_len: int = 8,
+               cache_capacity: int = 64, prompt_fn=None, **engine_kw):
     from repro.serving import PapiEngine, ServeRequest
     draft = (cfg, draft_params) if spec_len > 1 else None
     eng = PapiEngine(
         cfg, params,
-        max_slots=4, cache_capacity=64, prefill_len=8,
+        max_slots=4, cache_capacity=cache_capacity, prefill_len=prefill_len,
         alpha=6.0, eos_token=eos_token, spec_len=spec_len, draft=draft,
         fused=fused, mesh=mesh, **engine_kw,
     )
     for i in range(n_requests):
         n = max_new_fn(i) if max_new_fn is not None else max_new
-        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=n))
+        prompt = prompt_fn(i) if prompt_fn is not None else [3 + i, 5, 7]
+        eng.submit(ServeRequest(i, prompt, max_new_tokens=n))
     results = eng.run(max_iterations=400)
 
     # decode-only iterations after compile warmup (first 2 iterations carry
@@ -120,14 +132,23 @@ def main() -> int:
                          "gate) and merges a 'paged' section into the "
                          "existing BENCH_engine.json")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--long-prompt", action="store_true",
+                    help="A/B chunked admission (8-token prefill window, "
+                         "long prompts chunk through it) against a one-shot "
+                         "window wide enough for every prompt; merges a "
+                         "'long_prompt' section into --out and exits 1 if "
+                         "any token stream differs (short prompts included "
+                         "— they must be bit-identical to the pre-chunking "
+                         "path)")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
 
-    if args.mesh and args.kv == "paged":
+    if sum((bool(args.mesh), args.kv == "paged", args.long_prompt)) > 1:
         # each mode is its own early-returning A/B section; combining them
-        # would silently skip the mesh identity gate
-        print("--mesh and --kv paged are separate A/B modes: run one per "
-              "invocation (each merges its own section into --out)")
+        # would silently skip the other mode's identity gate
+        print("--mesh / --kv paged / --long-prompt are separate A/B modes: "
+              "run one per invocation (each merges its own section into "
+              "--out)")
         return 2
 
     # mesh sizing must precede the first jax backend touch
@@ -155,6 +176,51 @@ def main() -> int:
     cfg = get_config("qwen2-0.5b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     draft_params = init_params(cfg, jax.random.PRNGKey(9))
+
+    if args.long_prompt:
+        # Chunked-prefill A/B: the SAME engine code with an 8-token window
+        # (prompts >= 4x the window chunk through `models.prefill_chunk`)
+        # vs a 128-token window (every prompt one-shot = the pre-chunking
+        # admission path).  Request 0 is a short (<= window) prompt, so the
+        # gate covers BOTH acceptance clauses: long prompts complete
+        # untruncated AND short prompts stay bit-identical to the
+        # pre-chunking engine.  Exits 1 on any stream divergence.
+        vocab = cfg.vocab_size
+        def prompt_fn(i):
+            if i == 0:
+                return [3, 5, 7]
+            return [3 + (7 * i + j) % (vocab - 3) for j in range(32 + 4 * i)]
+        eos = vocab - 1               # never fires with random-init weights
+        common = dict(fused=True, spec_len=1, n_requests=5, max_new=12,
+                      eos_token=eos, cache_capacity=256, prompt_fn=prompt_fn)
+        chunked = run_engine(cfg, params, draft_params, prefill_len=8,
+                             **common)
+        oneshot = run_engine(cfg, params, draft_params, prefill_len=128,
+                             **common)
+        identical = chunked["token_streams"] == oneshot["token_streams"]
+        longest = max(len(prompt_fn(i)) for i in range(5))
+        section = {
+            "window_chunked": 8,
+            "window_oneshot": 128,
+            "longest_prompt": longest,
+            "chunked_tok_per_s": chunked["tok_per_s"],
+            "oneshot_tok_per_s": oneshot["tok_per_s"],
+            "tokens_bit_identical": identical,
+        }
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["long_prompt"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"long-prompt (<= {longest} tokens through an 8-token "
+              f"window): {chunked['tok_per_s']:.1f} tok/s chunked vs "
+              f"{oneshot['tok_per_s']:.1f} tok/s one-shot, tokens "
+              f"identical: {identical}")
+        print(f"wrote {out}")
+        if not identical:
+            print("WARNING: chunked admission diverged from the one-shot "
+                  "prefill token streams")
+            return 1
+        return 0
 
     if args.kv == "paged":
         # Paged mode A/Bs ONLY dense-vs-paged (greedy + speculative, mixed

@@ -12,6 +12,10 @@ mid-flight (mixed continuous batching).
 layout (pooled pages + block tables, page-budgeted admission; speculative
 rejections return their pages to the pool) — the token streams are
 identical, only the memory economics change.
+
+One request carries a prompt 3x the compiled prefill window: admission
+chunks it through the fixed-shape prefill (both caches, target and draft,
+fill at the same offsets), so long prompts are served untruncated.
 """
 import argparse
 
@@ -41,8 +45,12 @@ def main():
     )
     rng = np.random.default_rng(0)
     for i in range(4):
+        # request 0 carries a 48-token prompt — 3x the compiled 16-token
+        # prefill window — which admission chunks through the fixed-shape
+        # prefill (no truncation; its KV lands at running offsets)
+        plen = 48 if i == 0 else 8
         engine.submit(ServeRequest(
-            i, rng.integers(3, cfg.vocab_size, 8).tolist(),
+            i, rng.integers(3, cfg.vocab_size, plen).tolist(),
             max_new_tokens=18))
 
     # run a few iterations, then new requests arrive mid-stream

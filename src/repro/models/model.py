@@ -14,6 +14,7 @@ Entry points:
   init_cache(cfg, batch, capacity)      -> decode cache pytree
   forward_train(cfg, params, batch)     -> (loss, metrics)
   prefill(cfg, params, batch, cache)    -> (last_logits, cache)
+  prefill_chunk(cfg, params, cache, toks, lens) -> (next_tok, cache)
   decode_step(cfg, params, cache, toks) -> (logits, cache)
 """
 from __future__ import annotations
@@ -346,6 +347,28 @@ def _write_kv(k_cache, v_cache, k_new, v_new, pos):
     return k_cache, v_cache
 
 
+def _write_kv_masked(k_cache, v_cache, k_new, v_new, pos, valid_lens):
+    """Like `_write_kv`, but only the first `valid_lens[b]` of the t new
+    tokens are written per request; the rest are dropped entirely.
+
+    Chunked prefill needs this: the final chunk of a prompt is ragged, and
+    slots that are not part of the chunk wave (live decoding requests, idle
+    slots) ride the fixed-shape batch with valid_lens == 0.  A
+    dynamic_update_slice cannot mask, and worse, it clamps a start index
+    near the capacity edge DOWNWARD — silently overwriting earlier live KV.
+    Scatter with out-of-range indices in "drop" mode does exactly what is
+    needed: masked rows index one past the capacity and vanish.
+    """
+    b, t = k_new.shape[0], k_new.shape[1]
+    cap = k_cache.shape[1]
+    idx = pos[:, None] + jnp.arange(t)[None, :]               # [b, t]
+    idx = jnp.where(jnp.arange(t)[None, :] < valid_lens[:, None], idx, cap)
+    bidx = jnp.arange(b)[:, None]
+    k_cache = k_cache.at[bidx, idx].set(k_new, mode="drop")
+    v_cache = v_cache.at[bidx, idx].set(v_new, mode="drop")
+    return k_cache, v_cache
+
+
 def _paged_rows(pos, t, tables, page_size):
     """(physical page, row) coordinates for t new tokens per slot.
 
@@ -361,10 +384,19 @@ def _paged_rows(pos, t, tables, page_size):
     return phys, tok % page_size
 
 
-def _write_kv_paged(k_cache, v_cache, k_new, v_new, pos, tables):
-    """Scatter [b, t, nkv, hd] into the page pools [P, page, nkv, hd]."""
+def _write_kv_paged(k_cache, v_cache, k_new, v_new, pos, tables,
+                    valid_lens=None):
+    """Scatter [b, t, nkv, hd] into the page pools [P, page, nkv, hd].
+
+    With `valid_lens` (chunked prefill's ragged final chunk, and the
+    valid_lens == 0 rows of slots that are not chunking this wave), tokens
+    past the valid prefix are redirected to the shared garbage page 0 —
+    they never touch a live request's pages."""
     page_size = k_cache.shape[1]
     phys, row = _paged_rows(pos, k_new.shape[1], tables, page_size)
+    if valid_lens is not None:
+        valid = jnp.arange(k_new.shape[1])[None, :] < valid_lens[:, None]
+        phys = jnp.where(valid, phys, 0)
     k_cache = k_cache.at[phys, row].set(k_new)
     v_cache = v_cache.at[phys, row].set(v_new)
     return k_cache, v_cache
@@ -391,6 +423,8 @@ def attention_block(
     pos: jax.Array | None,
     mode: str,                      # train | prefill | decode
     tables: jax.Array | None = None,   # [b, max_blocks] => paged KV layout
+    write_lens: jax.Array | None = None,  # [b] chunked prefill: valid new
+                                          # tokens per slot (None = all t)
 ):
     """Pre-norm attention sub-block.  Returns (h, new_kv|None)."""
     a_in = L.norm(h, p["norm1"], cfg.norm, cfg.norm_eps)
@@ -401,7 +435,8 @@ def attention_block(
     if mode == "decode" and tables is not None:
         # paged layout: kv are page pools [num_pages, page, nkv, hd]
         assert kv is not None and pos is not None
-        k_cache, v_cache = _write_kv_paged(kv[0], kv[1], k, v, pos, tables)
+        k_cache, v_cache = _write_kv_paged(kv[0], kv[1], k, v, pos, tables,
+                                           valid_lens=write_lens)
         t = q.shape[1]
         if L.current_attn_impl() == "pim" and t == 1:
             # the paged flash-decode kernel gathers pages via its
@@ -418,7 +453,13 @@ def attention_block(
         new_kv = (k_cache, v_cache)
     elif mode == "decode":
         assert kv is not None and pos is not None
-        k_cache, v_cache = _write_kv(kv[0], kv[1], k, v, pos)
+        if write_lens is not None:
+            # chunked prefill: ragged tails / non-chunking slots must not
+            # write — and the hot decode path keeps its dynamic_update_slice
+            k_cache, v_cache = _write_kv_masked(kv[0], kv[1], k, v, pos,
+                                                write_lens)
+        else:
+            k_cache, v_cache = _write_kv(kv[0], kv[1], k, v, pos)
         t = q.shape[1]
         if L.current_attn_impl() == "pim" and t == 1:
             # Attn-PIM: the Pallas flash-decode kernel, one unit per KV
@@ -468,7 +509,8 @@ def ssm_block(cfg: ModelConfig, p: Mapping[str, Any], h: jax.Array,
 # Backbone
 # ===========================================================================
 
-def _transformer_backbone(cfg, params, h, positions, cache, mode, remat):
+def _transformer_backbone(cfg, params, h, positions, cache, mode, remat,
+                          write_lens=None):
     """Scan over stacked transformer layers (dense/moe/vlm/audio).
 
     With a cache, the FULL stacked KV tensors ride in the scan *carry* and
@@ -490,7 +532,8 @@ def _transformer_backbone(cfg, params, h, positions, cache, mode, remat):
             kc = jax.lax.dynamic_index_in_dim(kfull, i, 0, keepdims=False)
             vc = jax.lax.dynamic_index_in_dim(vfull, i, 0, keepdims=False)
             h, new_kv = attention_block(cfg, lp, h, positions, (kc, vc),
-                                        pos, mode, tables=tables)
+                                        pos, mode, tables=tables,
+                                        write_lens=write_lens)
             kfull = jax.lax.dynamic_update_slice_in_dim(
                 kfull, new_kv[0][None], i, 0)
             vfull = jax.lax.dynamic_update_slice_in_dim(
@@ -632,13 +675,17 @@ def _hybrid_backbone(cfg, params, h, positions, cache, mode, remat):
     return h, jnp.zeros((), jnp.float32), new_cache
 
 
-def backbone(cfg, params, h, positions, cache, mode, remat=False):
+def backbone(cfg, params, h, positions, cache, mode, remat=False,
+             write_lens=None):
     h = shard(h, "batch", "seq", None)
     if cfg.family == "ssm":
+        assert write_lens is None, "chunked prefill needs maskable KV writes"
         return _ssm_backbone(cfg, params, h, cache, mode, remat)
     if cfg.family == "hybrid":
+        assert write_lens is None, "chunked prefill needs maskable KV writes"
         return _hybrid_backbone(cfg, params, h, positions, cache, mode, remat)
-    return _transformer_backbone(cfg, params, h, positions, cache, mode, remat)
+    return _transformer_backbone(cfg, params, h, positions, cache, mode,
+                                 remat, write_lens=write_lens)
 
 
 # ===========================================================================
@@ -824,6 +871,54 @@ def prefill_to_pages(cfg, params, batch, cache, src):
     first = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [n]
     first_slots = jnp.where(keep, -1, jnp.take(first, take))
     return first_slots, cache
+
+
+def prefill_chunk(cfg, params, cache, tokens, chunk_lens):
+    """One wave of CHUNKED prefill: feed a [max_slots, P] window of prompt
+    tokens through the decode path at each slot's current cache position.
+
+    Admission splits any prompt longer than the compiled prefill window into
+    P-token chunks.  Chunk 0 goes through `prefill_to_slots` /
+    `prefill_to_pages` (positions 0..P-1); every later chunk goes through
+    this entry point, which
+
+      * embeds the window at per-slot ABSOLUTE positions ``cache["pos"] + j``
+        (RoPE must see prompt offsets, not 0..P-1);
+      * runs the backbone in decode mode, so each chunk token attends to all
+        previously-written KV plus its own chunk prefix — exactly the
+        one-shot prefill's causal mask restricted to this window;
+      * writes KV at the running offset, masked per slot to the first
+        ``chunk_lens[s]`` tokens (dense: out-of-window scatter indices are
+        dropped; paged: they land on the shared garbage page), so the ragged
+        final chunk and the slots NOT chunking this wave (live decodes,
+        idle slots — rows with ``chunk_lens[s] == 0``) never touch live
+        cache entries;
+      * advances ``cache["pos"]`` by ``chunk_lens`` (0 leaves a slot put).
+
+    Fixed shapes throughout: one compiled program serves every wave of
+    every admission, like `prefill_to_slots`.
+
+    Returns ``(next_tok, cache)``: ``next_tok[s]`` is the greedy token
+    following the last valid position of slot s's chunk — the request's
+    first output token when this was its final chunk (garbage for rows with
+    ``chunk_lens[s] == 0``; the engine only reads rows it finalized).
+    """
+    b, t = tokens.shape
+    pos = cache["pos"]
+    positions = pos[:, None] + jnp.arange(t)[None, :]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[:, None, :], (b, 3, t))
+    h, positions = embed_inputs(cfg, params, {"tokens": tokens,
+                                              "positions": positions})
+    h, _, cache = backbone(cfg, params, h, positions, cache, "decode",
+                           write_lens=chunk_lens)
+    idx = jnp.clip(chunk_lens - 1, 0, t - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = lm_logits(cfg, params, h_last)
+    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    cache = dict(cache)
+    cache["pos"] = pos + chunk_lens.astype(jnp.int32)
+    return nxt, cache
 
 
 def decode_step(cfg, params, cache, tokens, positions=None):

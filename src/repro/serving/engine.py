@@ -17,6 +17,24 @@ Slots are fixed-capacity (static shapes: the decode step is compiled once
 per TLP value).  Inactive slots decode garbage that is masked out — the
 standard padded-batch serving trade.
 
+Chunked prefill (no prompt truncation, ever)
+--------------------------------------------
+``prefill_len`` sizes the compiled prefill *window*, not the longest
+servable prompt.  Admission feeds an arbitrarily long prompt through the
+fixed-shape program in waves of `prefill_len`-token chunks: chunk 0 runs
+the batched `prefill_to_slots` / `prefill_to_pages` call (positions
+0..P-1), every later chunk runs `models.prefill_chunk` — the decode path
+at the slot's running offset, with per-slot masked KV writes so the ragged
+final chunk and concurrently-decoding slots never touch each other's
+cache.  Only the final chunk's logits produce the request's first output
+token, which makes the stream bit-identical to a one-shot prefill of the
+whole prompt (tested against that oracle).  Dense admission budgets the
+slab for ``len(prompt) + max_new + spec window`` and rejects honestly
+(``finished_reason="rejected"``) when the FULL prompt cannot fit; paged
+admission reserves pages for the full prompt up front and maps them before
+chunk 0, so every chunk scatters straight onto its pages.  A prompt that
+fits one window takes exactly the pre-chunking path.
+
 KV layouts (``kv_layout=``)
 ---------------------------
 ``"dense"`` (default): one `(layers, max_slots, cache_capacity, ...)` slab;
@@ -110,7 +128,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-import warnings
 from functools import partial
 from typing import Any, Sequence
 
@@ -123,7 +140,8 @@ from repro.core.scheduler import PapiScheduler
 from repro.distributed.sharding import axis_rules, serve_rules
 from repro.models import (cache_shardings, decode_step, init_cache,
                           init_paged_cache, paged_cache_shardings,
-                          param_shardings, prefill_to_pages, prefill_to_slots)
+                          param_shardings, prefill_chunk, prefill_to_pages,
+                          prefill_to_slots)
 from repro.models.layers import attn_impl
 from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
 from repro.serving.kv_pages import PagedKVManager
@@ -144,7 +162,11 @@ class ServeResult:
     prompt_len: int
     iterations: int
     finished_reason: str = "length"
-    prompt_truncated: bool = False   # prompt exceeded the prefill window
+    # DEPRECATED: prompts are never truncated anymore — admission chunks any
+    # prompt through the compiled prefill window (see the module docstring)
+    # and rejects honestly when a prompt cannot fit the KV budget at all.
+    # Always False; kept one release for callers that read it.
+    prompt_truncated: bool = False
 
 
 @dataclasses.dataclass
@@ -255,16 +277,23 @@ class PapiEngine:
         self.slot_req: list[ServeRequest | None] = [None] * max_slots
         self.slot_tokens: list[list[int]] = [[] for _ in range(max_slots)]
         self.slot_last: np.ndarray = np.zeros(max_slots, np.int32)
-        # prompt tokens actually prefilled per slot: with the paged layout
-        # the device cache position of a live slot is
+        # full prompt tokens prefilled per slot (chunked admission writes the
+        # whole prompt): the device cache position of a live slot is
         # slot_prompt[s] + len(slot_tokens[s]) - 1 (see _slot_pos)
         self.slot_prompt: np.ndarray = np.zeros(max_slots, np.int32)
+        # effective generation budget per slot — the admission-clamped
+        # max_new_tokens lives HERE, never written back into the caller's
+        # ServeRequest (resubmitting the same object must see it pristine)
+        self.slot_budget: np.ndarray = np.zeros(max_slots, np.int64)
         self.queue: list[ServeRequest] = []
         self.results: list[ServeResult] = []
         self.stats: list[IterStats] = []
         self.iteration = 0
         self.host_transfers = 0
-        self._warned_truncation = False
+        # chunked prefill masks its KV writes per slot; SSM state has no
+        # sequence dim to mask, so stateful families keep single-window
+        # prefill and reject longer prompts honestly
+        self._can_chunk = cfg.family in ("dense", "moe", "vlm", "audio")
 
         if draft is not None:
             self.draft_cfg, self.draft_params = draft
@@ -434,6 +463,17 @@ class PapiEngine:
             self._prefill_jit[key] = jax.jit(partial(fn, cfg))
         return self._prefill_jit[key]
 
+    def _get_chunk(self, which: str):
+        """Chunked-prefill continuation step (`models.prefill_chunk`): one
+        fixed [max_slots, prefill_len] window through the decode path at
+        each slot's running prompt offset.  Layout-agnostic — the cache
+        pytree carries the block tables when paged."""
+        cfg = self.draft_cfg if which == "draft" else self.cfg
+        key = ("chunk_" + which, current_fc_variant(), current_fc_interpret())
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = jax.jit(partial(prefill_chunk, cfg))
+        return self._prefill_jit[key]
+
     def _admit(self) -> int:
         """Mixed continuous batching: fill free slots from the queue, one
         compiled `prefill_to_slots` call per admission wave (fixed-shape
@@ -449,21 +489,9 @@ class PapiEngine:
             if not (instant_finish and self.queue):
                 return admitted
 
-    def _note_truncation(self, req: ServeRequest) -> bool:
-        """Record (and warn once) when a prompt exceeds the prefill window —
-        the window keeps the LAST prefill_len tokens and silently dropping
-        the head is a correctness hazard the caller must be able to see."""
-        if len(req.prompt) <= self.prefill_len:
-            return False
-        if not self._warned_truncation:
-            warnings.warn(
-                f"prompt of request {req.req_id} ({len(req.prompt)} tokens) "
-                f"exceeds prefill_len={self.prefill_len}; keeping the last "
-                f"{self.prefill_len} tokens (ServeResult.prompt_truncated "
-                "is set; further truncations warn silently)",
-                stacklevel=3)
-            self._warned_truncation = True
-        return True
+    def _reject(self, req: ServeRequest) -> None:
+        self.results.append(ServeResult(
+            req.req_id, [], len(req.prompt), self.iteration, "rejected"))
 
     def _admit_wave(self) -> tuple[int, bool]:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
@@ -471,19 +499,25 @@ class PapiEngine:
         window = max(self.spec_len, 1)
         while self.queue and free:
             req = self.queue[0]
-            p = min(len(req.prompt), self.prefill_len)
+            p = len(req.prompt)        # FULL prompt — never truncated
+            if p > self.prefill_len and not self._can_chunk:
+                # SSM/hybrid state cannot mask the garbage tail of a chunk
+                # window, so stateful families stay single-window; reject
+                # honestly instead of silently dropping the prompt head
+                self.queue.pop(0)
+                self._reject(req)
+                continue
             if self.kv is not None:
                 # page-budgeted admission: a request enters iff pages for
-                # prompt + max_new_tokens + a speculative window are
-                # available (reserved up front, mapped lazily); per-request
-                # length is bounded by the POOL, not a per-slot slab
+                # the FULL prompt + max_new_tokens + a speculative window
+                # are available.  The prompt's pages are mapped up front
+                # (every chunk scatters straight onto them); the rest of
+                # the budget is reserved and mapped lazily.  Per-request
+                # length is bounded by the POOL, not a per-slot slab.
                 cap = self.kv.max_context - p - window
                 if cap < 1:
                     self.queue.pop(0)
-                    self.results.append(ServeResult(
-                        req.req_id, [], len(req.prompt), self.iteration,
-                        "rejected", self._note_truncation(req),
-                    ))
+                    self._reject(req)
                     continue
                 want = max(1, min(req.max_new_tokens, cap))
                 if not self.kv.can_admit(p + want + window):
@@ -492,36 +526,37 @@ class PapiEngine:
                     # queue keeps order) instead of rejecting
                     break
                 self.queue.pop(0)
-                req.max_new_tokens = want
                 slot = free.pop(0)
                 self.kv.admit(slot, p + want + window, p)
+                self.slot_budget[slot] = want
                 batch_rows.append((slot, req))
                 continue
             self.queue.pop(0)
             # never let a request outgrow its slot's KV capacity: the budget
-            # reserves a full speculative window past the last new token
+            # reserves a full speculative window past the last new token.
+            # A prompt the slab cannot hold at all is rejected — honestly,
+            # not truncated.
             budget = self.capacity - p - window
             if budget < 1:
                 # cannot emit even one token without overflowing the slot
-                self.results.append(ServeResult(
-                    req.req_id, [], len(req.prompt), self.iteration,
-                    "rejected", self._note_truncation(req),
-                ))
+                self._reject(req)
                 continue
-            req.max_new_tokens = max(1, min(req.max_new_tokens, budget))
-            batch_rows.append((free.pop(0), req))
+            slot = free.pop(0)
+            self.slot_budget[slot] = max(1, min(req.max_new_tokens, budget))
+            batch_rows.append((slot, req))
         if not batch_rows:
             return 0, False
 
+        # ---- chunk 0: the compiled fixed-shape prefill (positions 0..P-1)
         tokens = np.zeros((self.max_slots, self.prefill_len), np.int32)
         lens = np.ones(self.max_slots, np.int32)
         src = np.full(self.max_slots, -1, np.int32)
         for row, (slot, req) in enumerate(batch_rows):
-            p = min(len(req.prompt), self.prefill_len)
-            tokens[row, :p] = req.prompt[-self.prefill_len:][:p]
-            lens[row] = p
+            p0 = min(len(req.prompt), self.prefill_len)
+            tokens[row, :p0] = req.prompt[:p0]
+            lens[row] = p0
             src[slot] = row
-            self.slot_prompt[slot] = p
+            self.slot_prompt[slot] = len(req.prompt)
         batch = {"tokens": jnp.asarray(tokens),
                  "prompt_lens": jnp.asarray(lens)}
         src_dev = jnp.asarray(src)
@@ -532,7 +567,47 @@ class PapiEngine:
             if self.draft_cfg is not None:
                 _, self.draft_cache = self._get_prefill("draft")(
                     self.draft_params, batch, self.draft_cache, src_dev)
-        first_h = self._fetch(first)
+        # ---- chunks 1..: prompts longer than the window continue through
+        # the fixed-shape chunk step at their running offsets.  Every wave
+        # advances each pending slot by one (ragged-tail-masked) window; a
+        # slot's first output token comes from its FINAL chunk's logits.
+        # Nothing host-side depends on a wave's result (tokens come from
+        # req.prompt), so all waves dispatch back-to-back and the whole
+        # admission costs ONE device->host sync at the end.
+        pending = {slot: req for slot, req in batch_rows
+                   if len(req.prompt) > self.prefill_len}
+        offs = {slot: self.prefill_len for slot in pending}
+        wave_finals: list[tuple[Any, list[int]]] = []
+        while pending:
+            ctoks = np.zeros((self.max_slots, self.prefill_len), np.int32)
+            clens = np.zeros(self.max_slots, np.int32)
+            final: list[int] = []
+            for slot, req in list(pending.items()):
+                n = min(len(req.prompt) - offs[slot], self.prefill_len)
+                ctoks[slot, :n] = req.prompt[offs[slot]:offs[slot] + n]
+                clens[slot] = n
+                offs[slot] += n
+                if offs[slot] == len(req.prompt):
+                    final.append(slot)
+                    del pending[slot]
+            ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
+            with self._scope():
+                nxt, self.cache = self._get_chunk("main")(
+                    self.params, self.cache, ct, cl)
+                if self.draft_cfg is not None:
+                    # the draft's KV must cover the same prompt positions
+                    _, self.draft_cache = self._get_chunk("draft")(
+                        self.draft_params, self.draft_cache, ct, cl)
+            if final:
+                wave_finals.append((nxt, final))
+        got = self._fetch(first, *(nxt for nxt, _ in wave_finals))
+        if wave_finals:
+            first_h = np.array(got[0])
+            for (_, final), nxt_h in zip(wave_finals, got[1:]):
+                for slot in final:
+                    first_h[slot] = int(nxt_h[slot])
+        else:
+            first_h = np.array(got)
 
         admitted = 0
         instant_finish = False
@@ -541,12 +616,11 @@ class PapiEngine:
             self.slot_tokens[slot] = [tok]
             self.slot_last[slot] = tok
             # prefill already produced the first output token
-            if tok == self.eos_token or req.max_new_tokens <= 1:
+            if tok == self.eos_token or self.slot_budget[slot] <= 1:
                 reason = "eos" if tok == self.eos_token else "length"
                 self.results.append(ServeResult(
                     req.req_id, [tok], len(req.prompt), self.iteration,
-                    reason, self._note_truncation(req),
-                ))
+                    reason))
                 self.slot_last[slot] = 0   # slot stays available
                 if self.kv is not None:
                     self.kv.release(slot)
@@ -640,7 +714,11 @@ class PapiEngine:
         admitted = self._admit()
         active = self.active_slots
         if not active:
+            # Still a step: count it, or `run(max_iterations=)` is a dead
+            # guard — paged admission deferring with nothing active would
+            # spin this loop forever (regression-tested).
             self.scheduler.observe_counts(0, admitted)
+            self.iteration += 1
             return
 
         speculating = self.spec_len > 1 and self.draft_cfg is not None
@@ -671,12 +749,12 @@ class PapiEngine:
                 self.slot_tokens[s].append(tok)
                 iter_tokens.append(tok)
                 if tok == self.eos_token or (
-                    len(self.slot_tokens[s]) >= req.max_new_tokens
+                    len(self.slot_tokens[s]) >= self.slot_budget[s]
                 ):
                     reason = "eos" if tok == self.eos_token else "length"
                     self.results.append(ServeResult(
                         req.req_id, self.slot_tokens[s], len(req.prompt),
-                        self.iteration, reason, self._note_truncation(req),
+                        self.iteration, reason,
                     ))
                     self.slot_req[s] = None
                     finished_flags[s] = True
@@ -742,18 +820,41 @@ class PapiEngine:
     def set_spec_len(self, tlp: int) -> None:
         """Host updates the TLP register (dynamic speculation length).
 
-        Paged layout: every live request's admission reservation covered
-        `prompt + max_new + OLD window` pages, so widening the window must
-        re-budget them or the per-iteration `ensure()` could exhaust the
-        pool mid-flight.  If the free pool cannot cover the wider window
-        for every live slot, the window is clamped to the widest value it
-        can (narrower is always affordable) — the scheduler simply gets a
+        Both layouts budget admission for `prompt + max_new + window`, so
+        widening the window mid-flight must re-check every LIVE slot or the
+        verify step's KV writes overrun what admission reserved:
+
+        * paged — the admission reservation covered the OLD window's pages;
+          widening re-budgets live slots' reservations and clamps the
+          window to what the free pool (and block-table width) can cover,
+          or the per-iteration `ensure()` could exhaust the pool mid-flight;
+        * dense — a live slot's slab holds `prompt + budget + OLD window`
+          tokens; a wider window would make the verify step's
+          dynamic_update_slice run past `cache_capacity`, where it CLAMPS
+          downward and silently corrupts earlier live KV.  The window is
+          clamped to the smallest live slot's headroom instead.
+
+        Narrower is always affordable; on clamp the scheduler simply gets a
         smaller TLP than it asked for this cycle.
         """
-        if self.kv is not None and tlp != self.spec_len:
-            tlp = self._rebudget_spec_window(tlp)
+        if tlp != self.spec_len:
+            tlp = (self._rebudget_spec_window(tlp) if self.kv is not None
+                   else self._clamp_spec_window_dense(tlp))
         self.spec_len = tlp
         self.scheduler.set_tlp(tlp)
+
+    def _clamp_spec_window_dense(self, tlp: int) -> int:
+        """Dense layout: admission guaranteed `prompt + budget + old_window
+        <= cache_capacity` per live slot, so the widest window every live
+        slot can hold is its remaining slab headroom."""
+        want = max(tlp, 1)
+        live = [s for s in range(self.max_slots)
+                if self.slot_req[s] is not None]
+        for s in live:
+            headroom = (self.capacity - int(self.slot_prompt[s])
+                        - int(self.slot_budget[s]))
+            want = min(want, max(headroom, 1))
+        return want if want != max(tlp, 1) else tlp
 
     def _rebudget_spec_window(self, tlp: int) -> int:
         """Adjust live slots' page reservations from the current speculative
@@ -766,7 +867,7 @@ class PapiEngine:
                 if self.slot_req[s] is not None]
 
         def budget(s: int, win: int) -> int:
-            base = int(self.slot_prompt[s]) + self.slot_req[s].max_new_tokens
+            base = int(self.slot_prompt[s]) + int(self.slot_budget[s])
             return self.kv.pages_for(base + win)
 
         def delta(s: int, new_win: int) -> int:

@@ -17,11 +17,16 @@ def greedy(logits: jax.Array) -> jax.Array:
 
 def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
            top_k: int = 0) -> jax.Array:
+    """Temperature + top-k sampling.  ``temperature <= 0`` is greedy;
+    ``top_k <= 0`` disables the top-k filter, and ``top_k >= vocab`` is a
+    no-op filter (every token survives) rather than an out-of-range index
+    into the sorted logits."""
     if temperature <= 0.0:
         return greedy(logits)
     logits = logits.astype(jnp.float32) / temperature
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        k = min(int(top_k), logits.shape[-1])
+        kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
 

@@ -1,0 +1,68 @@
+"""First tests for the temperature / top-k sampling path.
+
+`sampler.sample` had no coverage at all; notably `top_k >= vocab` indexed
+`logits[..., -top_k]` out of range and crashed — a no-op filter is the
+correct semantics (every token survives).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import greedy, sample
+
+V = 16
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def logits():
+    return jax.random.normal(jax.random.PRNGKey(7), (3, V), jnp.float32)
+
+
+def test_zero_temperature_is_greedy(logits):
+    out = sample(logits, KEY, temperature=0.0, top_k=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(greedy(logits)))
+    assert out.dtype == jnp.int32
+
+
+def test_top_k_one_is_greedy_for_any_key(logits):
+    """With only the argmax surviving the filter, the categorical draw is
+    deterministic regardless of the key."""
+    for seed in range(5):
+        out = sample(logits, jax.random.PRNGKey(seed), temperature=0.7,
+                     top_k=1)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(greedy(logits)))
+
+
+@pytest.mark.parametrize("top_k", [V, V + 1, 10 * V])
+def test_top_k_at_or_beyond_vocab_is_a_noop_filter(logits, top_k):
+    """top_k >= vocab used to index logits[..., -top_k] out of range; it
+    must behave exactly like top_k disabled (same key => same draw)."""
+    got = sample(logits, KEY, temperature=1.0, top_k=top_k)
+    want = sample(logits, KEY, temperature=1.0, top_k=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.all((np.asarray(got) >= 0) & (np.asarray(got) < V))
+
+
+def test_sampled_tokens_always_inside_top_k_set(logits):
+    k = 3
+    topk = np.argsort(np.asarray(logits), axis=-1)[:, -k:]
+    for seed in range(20):
+        out = np.asarray(sample(logits, jax.random.PRNGKey(seed),
+                                temperature=1.3, top_k=k))
+        for row in range(logits.shape[0]):
+            assert out[row] in topk[row], (row, out[row], topk[row])
+
+
+def test_temperature_sharpens_distribution():
+    """A mild logit gap becomes near-deterministic at low temperature and
+    stays diverse at high temperature."""
+    logits = jnp.asarray([[0.0, 1.0, 0.5, -0.5]])
+    cold = {int(sample(logits, jax.random.PRNGKey(s), temperature=0.05)[0])
+            for s in range(25)}
+    hot = {int(sample(logits, jax.random.PRNGKey(s), temperature=50.0)[0])
+           for s in range(25)}
+    assert cold == {1}
+    assert len(hot) > 1

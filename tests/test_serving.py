@@ -138,6 +138,85 @@ def test_attn_pim_path_matches_xla(small_model):
     assert run(attn_pim=True) == run()
 
 
+def test_step_counts_iteration_when_admission_defers(small_model):
+    """`run(max_iterations=)` was a dead guard: step()'s no-active-slots
+    early return skipped `iteration += 1`, so a queue whose head keeps
+    deferring (paged pool busy) spun run() forever.  Every step must count,
+    and run() must terminate at the bound."""
+    cfg, params = small_model
+    eng = _mk_engine(cfg, params, kv_layout="paged", page_size=16)
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=4))
+    eng.kv.can_admit = lambda *_: False        # pool "busy" forever
+    eng.step()
+    eng.step()
+    assert eng.iteration == 2                  # fails fast if steps vanish
+    res = eng.run(max_iterations=7)            # used to livelock here
+    assert eng.iteration == 7
+    assert res == [] and eng.queue             # nothing served, queue intact
+
+
+def test_dense_set_spec_len_widen_clamps_to_slab(small_model):
+    """Dense mirror of the paged re-budget: admission reserved
+    `prompt + budget + OLD window` slab rows per live slot, so widening the
+    window mid-flight must clamp to the smallest live headroom — otherwise
+    the verify step's dynamic_update_slice clamps at the capacity edge and
+    silently corrupts earlier KV."""
+    cfg, params = small_model
+    draft_cfg = get_config("qwen2-0.5b").reduced()
+    draft_params = init_params(draft_cfg, jax.random.PRNGKey(9))
+    no_eos = cfg.vocab_size - 1
+
+    plain = _mk_engine(cfg, params, max_slots=2, cache_capacity=24,
+                       eos_token=no_eos)
+    plain.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=19))
+    want = plain.run(max_iterations=100)[0].tokens
+    assert len(want) == 19                     # budget exactly fills the slab
+
+    eng = _mk_engine(cfg, params, max_slots=2, cache_capacity=24,
+                     eos_token=no_eos, spec_len=2,
+                     draft=(draft_cfg, draft_params))
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=19))
+    eng.run(max_iterations=2)
+    assert eng.active_slots == [0]             # 3 + 19 + 2 = 24: zero headroom
+    eng.set_spec_len(6)
+    assert eng.spec_len == 2                   # clamped, not widened
+    got = eng.run(max_iterations=200)[0].tokens
+    assert got == want                         # lossless despite the attempt
+
+    # with slab headroom the widen goes through
+    eng2 = _mk_engine(cfg, params, max_slots=2, cache_capacity=40,
+                      eos_token=no_eos, spec_len=2,
+                      draft=(draft_cfg, draft_params))
+    eng2.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=19))
+    eng2.run(max_iterations=2)
+    eng2.set_spec_len(6)
+    assert eng2.spec_len == 6
+    assert eng2.run(max_iterations=200)[0].tokens == want
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_admission_never_mutates_caller_request(small_model, kv_layout):
+    """_admit_wave used to write the clamped budget back into
+    `req.max_new_tokens`, corrupting the caller's ServeRequest — a resubmit
+    of the same object then ran with the previous engine's clamp.  The
+    effective budget lives in engine slot state now."""
+    cfg, params = small_model
+    no_eos = cfg.vocab_size - 1
+    kw = {"page_size": 4} if kv_layout == "paged" else {}
+    req = ServeRequest(0, [3, 5, 7], max_new_tokens=500)   # over any budget
+
+    def run_once():
+        eng = _mk_engine(cfg, params, cache_capacity=16, eos_token=no_eos,
+                         kv_layout=kv_layout, **kw)
+        eng.submit(req)
+        return eng.run(max_iterations=100)[0].tokens
+
+    first = run_once()
+    assert req.max_new_tokens == 500           # caller object pristine
+    assert run_once() == first                 # resubmit: same clamp, stream
+    assert req.max_new_tokens == 500
+
+
 def test_pim_variant_runs_real_fc_gemv(small_model):
     """Force the pim path (interpret mode): the engine's decode must route
     FC projections through the Pallas kernel and still match the pu path."""

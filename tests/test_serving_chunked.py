@@ -1,0 +1,180 @@
+"""Chunked prefill tests: long prompts through the fixed prefill window.
+
+The contract under test (ISSUE 4 acceptance):
+  * a prompt of length >= 4 x prefill_len completes UNTRUNCATED on both KV
+    layouts, and its greedy stream equals a one-shot prefill + decode loop
+    on the raw model (the oracle the chunk waves must be invisible to);
+  * a prompt <= prefill_len takes exactly the pre-chunking path — streams
+    are bit-identical to an engine whose window holds every prompt one-shot;
+  * the ragged final chunk (prompt length not a multiple of the window)
+    masks its tail writes instead of corrupting neighbouring cache rows;
+  * chunked admission composes with speculative decoding (the draft cache
+    chunks the same prompt positions) and with requests already decoding in
+    other slots when the chunk waves run;
+  * a prompt the dense slab cannot hold AT ALL is rejected honestly
+    (finished_reason="rejected") — never silently truncated — while the
+    paged engine completes it from the pooled pages.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving import PapiEngine, ServeRequest
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def draft_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(9))
+
+
+# an eos random-init weights essentially never argmax to: generation lengths
+# stay deterministic, so budgets (not eos luck) end every request
+NO_EOS = get_config("qwen2-0.5b").reduced().vocab_size - 1
+
+
+def _oracle(cfg, params, prompt, n_new, capacity=160):
+    """One-shot prefill of the WHOLE prompt + greedy decode loop on the raw
+    model — what chunked admission must be indistinguishable from."""
+    cache = init_cache(cfg, 1, capacity)
+    logits, cache = prefill(
+        cfg, params,
+        {"tokens": jnp.asarray([prompt], jnp.int32),
+         "prompt_lens": jnp.asarray([len(prompt)], jnp.int32)},
+        cache,
+    )
+    toks = [int(np.argmax(np.asarray(logits[0])))]
+    for _ in range(n_new - 1):
+        lg, cache = decode_step(cfg, params, cache, jnp.asarray([[toks[-1]]]))
+        toks.append(int(np.argmax(np.asarray(lg[0, 0]))))
+    return toks
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
+                    alpha=6.0, eos_token=NO_EOS)
+    defaults.update(kw)
+    return PapiEngine(cfg, params, **defaults)
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+@pytest.mark.parametrize("plen", [32, 33])   # 4 x window, and a ragged tail
+def test_long_prompt_matches_oneshot_oracle(small_model, kv_layout, plen):
+    """>= 4 x prefill_len tokens chunk through the 8-token window; the
+    greedy stream must equal the raw-model one-shot prefill oracle."""
+    cfg, params = small_model
+    prompt = list(range(3, 3 + plen))
+    want = _oracle(cfg, params, prompt, 6)
+    kw = {"page_size": 8} if kv_layout == "paged" else {}
+    eng = _engine(cfg, params, kv_layout=kv_layout, **kw)
+    eng.submit(ServeRequest(0, prompt, max_new_tokens=6))
+    res = eng.run(max_iterations=100)
+    assert res[0].tokens == want
+    assert res[0].finished_reason == "length"
+    assert not res[0].prompt_truncated
+
+
+def test_mixed_lengths_bit_identical_to_wide_window(small_model):
+    """Short and long prompts together: the 8-token-window engine (long
+    prompts chunk) must emit streams bit-identical to a 64-token-window
+    engine (everything one-shot) — i.e. to the pre-chunking engine on every
+    prompt that engine could already hold."""
+    cfg, params = small_model
+    reqs = [(list(range(3 + i, 3 + i + p)), 4 + i)
+            for i, p in enumerate([2, 5, 8, 20, 32])]
+
+    def run(prefill_len):
+        eng = _engine(cfg, params, prefill_len=prefill_len)
+        for i, (prompt, n) in enumerate(reqs):
+            eng.submit(ServeRequest(i, prompt, max_new_tokens=n))
+        return {r.req_id: (r.tokens, r.finished_reason)
+                for r in eng.run(max_iterations=200)}
+
+    assert run(8) == run(64)
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_chunked_admission_interleaved_with_running_decodes(small_model,
+                                                            kv_layout):
+    """A long prompt's chunk waves run while another slot is mid-decode:
+    the masked chunk writes must leave the live slot's KV untouched (its
+    stream equals its solo run) and the chunked request still matches the
+    oracle."""
+    cfg, params = small_model
+    kw = {"page_size": 8} if kv_layout == "paged" else {}
+    short, long_p = [3, 5, 7], list(range(3, 3 + 32))
+    want_short = _oracle(cfg, params, short, 20)
+    want_long = _oracle(cfg, params, long_p, 6)
+
+    eng = _engine(cfg, params, kv_layout=kv_layout, **kw)
+    eng.submit(ServeRequest(0, short, max_new_tokens=20))
+    eng.step()
+    eng.step()                       # slot 0 is decoding...
+    eng.submit(ServeRequest(1, long_p, max_new_tokens=6))   # ...now chunk in
+    res = {r.req_id: r.tokens for r in eng.run(max_iterations=200)}
+    assert res[0] == want_short
+    assert res[1] == want_long
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_speculative_chunked_prefill_lossless(small_model, draft_model,
+                                              kv_layout):
+    """Chunked admission fills BOTH caches (target and draft) at the same
+    prompt positions; greedy speculation stays lossless, so the stream must
+    still equal the plain one-shot oracle."""
+    cfg, params = small_model
+    prompt = list(range(3, 3 + 32))
+    want = _oracle(cfg, params, prompt, 8)
+    kw = {"page_size": 8} if kv_layout == "paged" else {}
+    eng = _engine(cfg, params, kv_layout=kv_layout, spec_len=3,
+                  draft=draft_model, **kw)
+    eng.submit(ServeRequest(0, prompt, max_new_tokens=8))
+    assert eng.run(max_iterations=100)[0].tokens == want
+
+
+def test_dense_rejects_prompt_beyond_slab_capacity(small_model):
+    """Honest rejection replaced truncation: a prompt the dense slab cannot
+    hold (prompt + 1 token + spec window > cache_capacity) is rejected with
+    empty tokens — and NO truncation warning fires for any long prompt."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, cache_capacity=16)
+    eng.submit(ServeRequest(0, list(range(3, 3 + 20)), max_new_tokens=5))
+    eng.submit(ServeRequest(1, list(range(3, 3 + 14)), max_new_tokens=5))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = {r.req_id: r for r in eng.run(max_iterations=50)}
+    assert not any("prefill_len" in str(w.message) for w in caught)
+    assert res[0].finished_reason == "rejected" and res[0].tokens == []
+    # 14 + 1 + 1 = 16 fits exactly: chunked in (2 windows), 1-token budget
+    assert res[1].finished_reason == "length" and len(res[1].tokens) == 1
+
+
+def test_paged_long_prompt_beyond_dense_capacity(small_model):
+    """THE long-context scenario chunking unlocks: an 80-token prompt
+    exceeds the 64-token dense slab (dense rejects honestly) but chunks
+    into the paged pool and completes, matching the oracle."""
+    cfg, params = small_model
+    prompt = list(range(3, 3 + 80))
+    want = _oracle(cfg, params, prompt, 10)
+
+    dense = _engine(cfg, params)
+    dense.submit(ServeRequest(0, prompt, max_new_tokens=10))
+    assert dense.run(max_iterations=50)[0].finished_reason == "rejected"
+
+    paged = _engine(cfg, params, kv_layout="paged", page_size=16)
+    paged.submit(ServeRequest(0, prompt, max_new_tokens=10))
+    res = paged.run(max_iterations=100)
+    assert res[0].tokens == want and res[0].finished_reason == "length"
+    assert paged.kv.alloc.mapped_count == 0      # pool drained afterwards

@@ -8,8 +8,9 @@ The contract under test (ISSUE 3 acceptance):
     completes under the paged layout (pooled pages, no uniform slot cap);
   * the paged flash-decode kernel is bit-identical to the dense kernel on
     identical KV contents (same body, block_k = page_size);
-  * silent prompt truncation is no longer silent (ServeResult.prompt_
-    truncated + a one-time warning);
+  * prompt truncation is GONE: prompts longer than the prefill window are
+    chunked through it and complete in full (ServeResult.prompt_truncated
+    is deprecated and always False);
   * the pool drains: after all requests finish, every page is free again.
 """
 import warnings
@@ -213,26 +214,32 @@ def test_paged_iter_stats_surface_pool_state(small_model):
 
 
 @pytest.mark.parametrize("kv_layout", ["dense", "paged"])
-def test_prompt_truncation_recorded_and_warned_once(small_model, kv_layout):
-    """`p = min(len(prompt), prefill_len)` used to drop tokens silently;
-    now the result records it and the engine warns once."""
+def test_long_prompts_complete_untruncated(small_model, kv_layout):
+    """`p = min(len(prompt), prefill_len)` used to silently drop the prompt
+    head; admission now CHUNKS any prompt through the prefill window, so
+    long prompts complete in full — no truncation flag, no warning, and the
+    streams match an engine whose window holds each prompt one-shot."""
     cfg, params = small_model
     kw = {"page_size": 16} if kv_layout == "paged" else {}
-    eng = PapiEngine(cfg, params, max_slots=2, cache_capacity=64,
-                     prefill_len=8, alpha=6.0, eos_token=1,
-                     kv_layout=kv_layout, **kw)
-    long_prompt = list(range(3, 3 + 20))      # 20 > prefill_len = 8
-    eng.submit(ServeRequest(0, long_prompt, max_new_tokens=3))
-    eng.submit(ServeRequest(1, [3, 5], max_new_tokens=3))
-    eng.submit(ServeRequest(2, list(range(5, 5 + 30)), max_new_tokens=3))
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        results = {r.req_id: r for r in eng.run(max_iterations=100)}
-    assert results[0].prompt_truncated
-    assert results[2].prompt_truncated
-    assert not results[1].prompt_truncated
-    ours = [w for w in caught if "prefill_len" in str(w.message)]
-    assert len(ours) == 1                     # warn once per engine
+
+    def run(prefill_len):
+        eng = PapiEngine(cfg, params, max_slots=2, cache_capacity=64,
+                         prefill_len=prefill_len, alpha=6.0, eos_token=1,
+                         kv_layout=kv_layout, **kw)
+        eng.submit(ServeRequest(0, list(range(3, 3 + 20)), max_new_tokens=3))
+        eng.submit(ServeRequest(1, [3, 5], max_new_tokens=3))
+        eng.submit(ServeRequest(2, list(range(5, 5 + 30)), max_new_tokens=3))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            results = {r.req_id: r for r in eng.run(max_iterations=100)}
+        return results, caught
+
+    results, caught = run(prefill_len=8)      # 20- and 30-token prompts chunk
+    oneshot, _ = run(prefill_len=32)          # every prompt fits one window
+    assert not any("prefill_len" in str(w.message) for w in caught)
+    for i in range(3):
+        assert not results[i].prompt_truncated      # deprecated, always False
+        assert results[i].tokens == oneshot[i].tokens
 
 
 def test_paged_kernel_bit_identical_to_dense_kernel():

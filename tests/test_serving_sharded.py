@@ -191,6 +191,22 @@ def test_paged_engine_sharded_xla_path_matches_unsharded(small_model):
 
 
 @needs8
+def test_paged_mesh_chunked_prefill_matches_unsharded(small_model):
+    """Chunked admission under a mesh: a prompt 4x the prefill window runs
+    its chunk waves through the partitioned chunk step (paged scatter over
+    head-sharded pools) and must emit the exact tokens of the 1-device
+    DENSE engine, alongside a short prompt admitted in the same wave."""
+    cfg, params = small_model
+    no_eos = cfg.vocab_size - 1
+    reqs = [(list(range(3, 3 + 33)), 6), ([3, 5, 7], 5)]
+    want, _ = _run(cfg, params, reqs, eos_token=no_eos)
+    got, eng = _run(cfg, params, reqs, eos_token=no_eos,
+                    kv_layout="paged", page_size=8, mesh=_mesh(1, 2))
+    assert eng.mesh is not None
+    assert got == want
+
+
+@needs8
 def test_paged_decode_attention_sharded_bit_identical():
     """The paged kernel shard_mapped over KV heads (tables/lens replicated,
     page pools split on the head dim) must be BIT-identical to the
