@@ -29,9 +29,25 @@ measures partitioning overhead, not speedup.
 Attn-PIM bank-row layout (`serving/kv_pages.py`): decode throughput and
 peak *resident* KV bytes (dense always holds its full slabs; paged
 residency is the page-pool watermark) on a mixed-length greedy +
-speculative workload.  The section merges into BENCH_engine.json under a
-"paged" key and the run exits 1 if the paged token streams diverge from
-the dense engine's — the same identity gate as ``--mesh``.
+speculative workload.  The paged engine's block tables are capped at the
+dense slab's context (``max_blocks = cache_capacity / page_size``) so both
+sides bound per-request context identically — the pool-wide default table
+makes the XLA path gather a pool-sized view per decode step, which charges
+the LAYOUT for a 4x context-bound mismatch (speculative pays it 5x per
+iteration: k draft steps + the verify).  The section merges into
+BENCH_engine.json under a "paged" key and the run exits 1 if the paged
+token streams diverge from the dense engine's — the same identity gate as
+``--mesh``.
+
+The same invocation then A/Bs the paged SPECULATIVE engine's two
+attention routes — XLA page-gather vs the windowed block-table Pallas
+kernel (``attn_pim=True``: draft steps, TLP=k verify windows, and chunk
+waves all resolve pages inside the kernel index_map; `gather_kv_pages`
+never traces) — under the same exit-1 token-identity gate, merged under
+"paged_spec_attn_pim".  On CPU both kernels run in interpret mode, so the
+throughput delta measures interpret overhead, not the kernel: the win
+(one streaming pass, no materialized pool view) is a TPU property; the
+gate here is token identity.
 
 ``--long-prompt`` A/Bs chunked admission against the one-shot window: the
 same engine code runs long prompts (up to 6x) through an 8-token prefill
@@ -128,8 +144,11 @@ def main() -> int:
                          "host devices (e.g. 1,8)")
     ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
                     help="'paged' A/Bs the dense vs paged KV layout "
-                         "(throughput + resident KV bytes, token-identity "
-                         "gate) and merges a 'paged' section into the "
+                         "(throughput + resident KV bytes, equal context "
+                         "bounds, token-identity gate) AND the paged "
+                         "speculative engine's XLA-gather vs windowed "
+                         "Pallas kernel routes; merges 'paged' + "
+                         "'paged_spec_attn_pim' sections into the "
                          "existing BENCH_engine.json")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--long-prompt", action="store_true",
@@ -223,18 +242,28 @@ def main() -> int:
         return 0
 
     if args.kv == "paged":
-        # Paged mode A/Bs ONLY dense-vs-paged (greedy + speculative, mixed
+        # Paged mode A/Bs dense-vs-paged (greedy + speculative, mixed
         # request lengths so admission/growth/rewind all run) and MERGES a
         # "paged" section into the tracked BENCH_engine.json — the
         # fused/legacy baselines are not remeasured.  Exit 1 if the paged
         # token streams diverge from the dense engine's (same gate as
         # --mesh): the layout must change memory economics, never tokens.
+        # Both sides bound per-request context at the dense slab (64
+        # tokens): max_blocks caps the table width so the XLA decode path
+        # gathers a 64-token view, not the whole pool (see module
+        # docstring).
         ragged = lambda i: 8 + 5 * i
         eos = cfg.vocab_size - 1      # never fires with random-init weights
-        common = dict(fused=True, max_new_fn=ragged, eos_token=eos)
-        paged_kw = dict(kv_layout="paged", page_size=args.page_size)
-        section = {"page_size": args.page_size, "modes": {}}
+        cache_capacity = 64           # the dense slab = the context bound
+        common = dict(fused=True, max_new_fn=ragged, eos_token=eos,
+                      cache_capacity=cache_capacity)
+        max_blocks = max(cache_capacity // args.page_size, 1)
+        paged_kw = dict(kv_layout="paged", page_size=args.page_size,
+                        max_blocks=max_blocks)
+        section = {"page_size": args.page_size, "max_blocks": max_blocks,
+                   "modes": {}}
         identical = True
+        dense_streams = gather = None
         for label, spec in (("plain", 1), ("speculative", args.spec_len)):
             dense = run_engine(cfg, params, draft_params, spec_len=spec,
                                **common)
@@ -242,6 +271,9 @@ def main() -> int:
                                **common, **paged_kw)
             same = paged["token_streams"] == dense["token_streams"]
             identical = identical and same
+            if label == "speculative":
+                dense_streams = dense["token_streams"]
+                gather = paged    # the XLA-gather side of the pim A/B below
             section["modes"][label] = {
                 "dense_tok_per_s": dense["tok_per_s"],
                 "paged_tok_per_s": paged["tok_per_s"],
@@ -255,9 +287,39 @@ def main() -> int:
                   f"{dense['kv_bytes_resident_peak'] / 1e6:.2f}MB -> "
                   f"{paged['kv_bytes_resident_peak'] / 1e6:.2f}MB, "
                   f"tokens identical: {same}")
+
+        # Same run, second A/B: the paged SPECULATIVE engine's two attention
+        # routes — XLA page-gather (the loop's paged speculative run,
+        # reused, not remeasured) vs the windowed block-table Pallas kernel
+        # (attn_pim=True: k draft steps + the TLP=k verify window all
+        # resolve pages inside the index_map, gather_kv_pages never
+        # traces).  Identity gated against BOTH the XLA-path paged engine
+        # and the dense engine.  On CPU the kernel runs interpreted, so the
+        # delta measures interpret overhead (see module docstring).
+        kernel = run_engine(cfg, params, draft_params,
+                            spec_len=args.spec_len, **common, **paged_kw,
+                            attn_pim=True)
+        pim_same = (kernel["token_streams"] == gather["token_streams"]
+                    and kernel["token_streams"] == dense_streams)
+        identical = identical and pim_same
+        results_key = {
+            "spec_len": args.spec_len,
+            "page_size": args.page_size,
+            "max_blocks": max_blocks,
+            "xla_gather_tok_per_s": gather["tok_per_s"],
+            "attn_pim_kernel_tok_per_s": kernel["tok_per_s"],
+            "backend": jax.default_backend(),
+            "kernel_interpreted": jax.default_backend() != "tpu",
+            "tokens_bit_identical": pim_same,
+        }
+        print(f"paged_spec_attn_pim: {gather['tok_per_s']:.1f} tok/s "
+              f"XLA-gather vs {kernel['tok_per_s']:.1f} tok/s windowed "
+              f"kernel, tokens identical: {pim_same}")
+
         out = Path(args.out)
         results = json.loads(out.read_text()) if out.exists() else {}
         results["paged"] = section
+        results["paged_spec_attn_pim"] = results_key
         out.write_text(json.dumps(results, indent=2) + "\n")
         print(f"wrote {out}")
         if not identical:

@@ -7,11 +7,19 @@ mid-flight (mixed continuous batching).
 
     PYTHONPATH=src python examples/serve_speculative.py
     PYTHONPATH=src python examples/serve_speculative.py --paged
+    PYTHONPATH=src python examples/serve_speculative.py --paged --attn-pim
 
 ``--paged`` swaps the per-slot KV slabs for the paged Attn-PIM bank-row
 layout (pooled pages + block tables, page-budgeted admission; speculative
 rejections return their pages to the pool) — the token streams are
 identical, only the memory economics change.
+
+``--attn-pim`` routes the whole speculative loop's attention through the
+Pallas flash-decode kernels: the draft's single-token steps AND the
+target's TLP=3 verify windows (the windowed kernel applies the
+intra-window causal mask; with ``--paged`` it resolves pages inside its
+block-table index_map — no gathered pool view).  Token streams are again
+identical: the kernel moves bytes differently, never the argmax.
 
 One request carries a prompt 3x the compiled prefill window: admission
 chunks it through the fixed-shape prefill (both caches, target and draft,
@@ -30,6 +38,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache (Attn-PIM bank-row pages)")
+    ap.add_argument("--attn-pim", action="store_true",
+                    help="draft steps and TLP=3 verify windows through the "
+                         "(windowed) Pallas flash-decode kernels")
     args = ap.parse_args()
 
     cfg = get_config("granite-8b").reduced()
@@ -42,6 +53,7 @@ def main():
         cfg, params, max_slots=4, cache_capacity=128, prefill_len=16,
         alpha=6.0, spec_len=3, draft=draft,
         kv_layout="paged" if args.paged else "dense", page_size=16,
+        attn_pim=args.attn_pim,
     )
     rng = np.random.default_rng(0)
     for i in range(4):

@@ -2,14 +2,31 @@
 
 PAPI's Attn-PIM executes attention *next to the KV data* with modest compute
 (1 FPU / 2 banks), because decode attention is always memory-bound: each KV
-byte is read once per query.  The TPU-native translation is a kernel whose
-HBM traffic is exactly one streaming pass over the KV cache, with the online
-softmax state held in VMEM:
+byte is read once per query — and that includes the TLP>1 verify windows
+speculative decoding produces (§4–5): a t-token window still streams the
+cache exactly once, amortized over t query rows.  The TPU-native
+translation is a kernel whose HBM traffic is exactly one streaming pass
+over the KV cache, with the online softmax state held in VMEM:
 
   grid = (batch, kv_heads, S // block_k)   last axis innermost/sequential
   K/V blocks:  [block_k, hd]   streamed HBM -> VMEM once
-  Q block:     [g, hd]         (g = grouped query heads) pinned per (b, h)
-  scratch:     acc [g, hd] f32, m/l [g, 128] f32 running softmax state
+  Q block:     [R, hd]         R = q_rows * g query rows pinned per (b, h)
+  scratch:     acc [R, hd] f32, m/l [R, 128] f32 running softmax state
+
+Query windows (TLP > 1)
+-----------------------
+``q_rows=t`` generalizes the single decode token to a window of t query
+rows per KV head group — the speculative verify step (TLP = spec window)
+and chunked-prefill waves.  The R = t*g rows are (window, group)-row-major:
+row = r * g + gg holds window token r of grouped head gg, all t*g rows
+share one streaming KV pass and one MXU score matrix per block.  Masking
+is intra-window causal: the rows sit at consecutive absolute positions
+``lens - t .. lens - 1``, so KV position j is visible to window row r iff
+``j < lens - (t - 1) + r``.  For q_rows=1 this degrades to the plain
+``j < lens`` ragged mask, bit-identically.  ``lens >= q_rows`` is required
+(every row must keep at least its own diagonal position, or its softmax
+normalizer would be empty) — the engine guarantees it: lens = pos + t with
+pos >= 0.
 
 Masking uses per-request cache lengths (continuous batching => ragged),
 delivered via scalar prefetch (`PrefetchScalarGridSpec`) so they are
@@ -55,17 +72,18 @@ NEG_INF = -1e30
 
 def _kernel(
     lens_ref,      # SMEM [b] int32 — scalar-prefetched per-request lengths
-    q_ref,         # [1, 1, g, hd]
+    q_ref,         # [1, 1, R, hd]   R = q_rows * g, (window, group)-row-major
     k_ref,         # [1, block_k, 1, hd]
     v_ref,         # [1, block_k, 1, hd]
-    o_ref,         # [1, 1, g, hd]
-    acc_ref,       # VMEM [g, hd] f32
-    m_ref,         # VMEM [g, 128] f32 (lane-padded running max)
-    l_ref,         # VMEM [g, 128] f32 (lane-padded running sum)
+    o_ref,         # [1, 1, R, hd]
+    acc_ref,       # VMEM [R, hd] f32
+    m_ref,         # VMEM [R, 128] f32 (lane-padded running max)
+    l_ref,         # VMEM [R, 128] f32 (lane-padded running sum)
     *,
     block_k: int,
     num_kb: int,
     block_skip: bool,
+    q_rows: int = 1,
 ):
     i = pl.program_id(0)
     kb = pl.program_id(2)
@@ -89,7 +107,17 @@ def _kernel(
         ) * scale                                         # [g, block_k]
 
         kv_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kv_pos < length, s, NEG_INF)
+        if q_rows == 1:
+            # plain ragged mask — the seed kernel's exact expression
+            limit = length
+        else:
+            # intra-window causal mask: window row r (= row-index // g) sits
+            # at absolute position length - q_rows + r, so it sees KV
+            # positions j < length - (q_rows - 1) + r
+            g = s.shape[0] // q_rows
+            row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+            limit = length - (q_rows - 1) + row
+        s = jnp.where(kv_pos < limit, s, NEG_INF)
 
         m_prev = m_ref[:, 0:1]                            # [g, 1]
         m_cur = jnp.max(s, axis=-1, keepdims=True)        # [g, 1]
@@ -120,20 +148,22 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_k", "interpret", "block_skip"))
+    jax.jit, static_argnames=("block_k", "interpret", "block_skip", "q_rows"))
 def decode_attention(
-    q: jax.Array,          # [b, nkv, g, hd]
+    q: jax.Array,          # [b, nkv, R, hd]   R = q_rows * g
     k_cache: jax.Array,    # [b, S, nkv, hd]
     v_cache: jax.Array,    # [b, S, nkv, hd]
-    lens: jax.Array,       # [b] int32 valid lengths
+    lens: jax.Array,       # [b] int32 valid lengths (ALL q_rows included)
     *,
     block_k: int = 512,
     interpret: bool | None = None,
     block_skip: bool = True,
+    q_rows: int = 1,
 ) -> jax.Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, nkv, g, hd = q.shape
+    assert g % q_rows == 0, (g, q_rows)
     skv = k_cache.shape[1]
     block_k = min(block_k, skv)
     assert skv % block_k == 0, (skv, block_k)
@@ -153,7 +183,7 @@ def decode_attention(
 
     grid = (b, nkv, num_kb)
     kernel = functools.partial(_kernel, block_k=block_k, num_kb=num_kb,
-                               block_skip=block_skip)
+                               block_skip=block_skip, q_rows=q_rows)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -182,16 +212,17 @@ def decode_attention(
 
 
 def decode_attention_sharded(
-    q: jax.Array,          # [b, nkv, g, hd]
+    q: jax.Array,          # [b, nkv, R, hd]   R = q_rows * g
     k_cache: jax.Array,    # [b, S, nkv, hd]
     v_cache: jax.Array,    # [b, S, nkv, hd]
-    lens: jax.Array,       # [b] int32 valid lengths
+    lens: jax.Array,       # [b] int32 valid lengths (ALL q_rows included)
     *,
     mesh,
     axis: str = "model",
     block_k: int = 512,
     interpret: bool | None = None,
     block_skip: bool = True,
+    q_rows: int = 1,
 ) -> jax.Array:
     """One Attn-PIM unit per KV shard (§5.3): the kernel, `shard_map`-split
     over the KV-head dim of `axis`.
@@ -200,18 +231,23 @@ def decode_attention_sharded(
     never talks to its neighbours; the head dim is the axis with exactly that
     property — each shard runs the full online-softmax pass over its local
     heads' KV stream and no cross-shard reduction exists, so the result is
-    bit-identical to the unsharded kernel (tested).  When the head count does
-    not divide the axis (small GQA models on wide meshes) the unsharded
-    kernel runs replicated instead — same divisibility fallback the rule
-    tables use for weights.
+    bit-identical to the unsharded kernel (tested).  Query windows
+    (``q_rows > 1``, the speculative verify / chunked-prefill form) shard
+    identically: the window rows ride the head dim they belong to, so each
+    shard masks its own rows locally.  When the head count does not divide
+    the axis (small GQA models on wide meshes) the unsharded kernel runs
+    replicated instead — same divisibility fallback the rule tables use for
+    weights.
     """
     nkv = q.shape[1]
     size = dict(mesh.shape).get(axis, 1)
     if size <= 1 or nkv % size != 0:
         return decode_attention(q, k_cache, v_cache, lens, block_k=block_k,
-                                interpret=interpret, block_skip=block_skip)
+                                interpret=interpret, block_skip=block_skip,
+                                q_rows=q_rows)
     kernel = functools.partial(decode_attention, block_k=block_k,
-                               interpret=interpret, block_skip=block_skip)
+                               interpret=interpret, block_skip=block_skip,
+                               q_rows=q_rows)
     return shard_map(
         lambda qs, ks, vs, ls: kernel(qs, ks, vs, ls),
         mesh=mesh,

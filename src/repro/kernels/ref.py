@@ -29,6 +29,33 @@ def decode_attention_ref(
     return out.astype(q.dtype)
 
 
+def decode_attention_window_ref(
+    q: jax.Array,          # [b, nkv, t*g, hd]  (window, group)-row-major
+    k_cache: jax.Array,    # [b, S, nkv, hd]
+    v_cache: jax.Array,    # [b, S, nkv, hd]
+    lens: jax.Array,       # [b] valid lengths, ALL t window tokens included
+    q_rows: int,
+) -> jax.Array:            # [b, nkv, t*g, hd]
+    """Windowed decode attention oracle (TLP > 1 verify / chunk waves).
+
+    Window row r sits at absolute position lens - q_rows + r and sees KV
+    position j iff j < lens - (q_rows - 1) + r; rows are (window,
+    group)-row-major within each KV head, matching the kernels' q layout.
+    """
+    b, nkv, tg, hd = q.shape
+    g = tg // q_rows
+    skv = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhgk,bshk->bhgs", q, k_cache).astype(jnp.float32) * scale
+    row = jnp.arange(tg) // g                                   # [t*g]
+    limit = lens[:, None] - (q_rows - 1) + row[None, :]         # [b, t*g]
+    valid = jnp.arange(skv)[None, None, :] < limit[:, :, None]  # [b, t*g, S]
+    s = jnp.where(valid[:, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshk->bhgk", p.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
 def fc_gemv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     """x: [m, K] @ w: [K, N] with f32 accumulation."""
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -23,7 +23,11 @@ dp*tp host devices automatically, so
 runs the full 8-way tensor-parallel engine on one machine (token streams
 are identical to the 1-device run — greedy argmax is invariant to the
 partitioning's ulp-level logit shifts).  ``--attn-pim`` additionally routes
-plain decode attention through the Pallas flash-decode kernel.
+EVERY decode-path attention through the Pallas flash-decode kernel: plain
+decode, the TLP>1 verify windows ``--spec-len`` produces (the windowed
+kernel applies the intra-window causal mask), and chunked-prefill waves —
+so the flag composes with speculative decoding and ``--kv paged`` instead
+of silently reverting to the XLA path outside plain decode.
 
 ``--kv paged`` switches the KV cache to the Attn-PIM bank-row layout:
 pooled fixed-size pages + per-slot block tables, page-budgeted admission
@@ -53,7 +57,10 @@ def main() -> None:
                          "parallel (FC-PIM banks / Attn-PIM KV shards)")
     ap.add_argument("--attn-pim", action="store_true",
                     help="decode attention through the Pallas flash-decode "
-                         "kernel (sharded per KV shard under --mesh)")
+                         "kernel — plain decode, speculative verify "
+                         "windows, and chunked-prefill waves alike "
+                         "(sharded per KV shard under --mesh; block-table "
+                         "kernel under --kv paged)")
     ap.add_argument("--kv", choices=("dense", "paged"), default="dense",
                     help="KV-cache layout: 'dense' per-slot slabs, or "
                          "'paged' Attn-PIM bank-row pages with block tables "
@@ -65,7 +72,8 @@ def main() -> None:
     ap.add_argument("--max-blocks", type=int, default=None,
                     help="block-table width (--kv paged): caps per-request "
                          "context at max_blocks*page_size tokens and bounds "
-                         "the XLA decode path's gathered KV view; default = "
+                         "the XLA oracle path's gathered KV view (the "
+                         "--attn-pim kernel never gathers); default = "
                          "the whole pool")
     args = ap.parse_args()
 

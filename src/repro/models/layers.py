@@ -336,64 +336,88 @@ def gather_kv_pages(pages: jax.Array, tables: jax.Array) -> jax.Array:
     """Materialize a contiguous per-slot KV view from the page pool:
     [num_pages, page, nkv, hd] gathered by [b, max_blocks] block tables ->
     [b, max_blocks * page, nkv, hd].  This is the XLA decode path for the
-    paged cache (TLP>1 verify windows and the non-pim reference); the paged
-    Pallas kernel performs the same gather inside its index_map without
-    ever building this view."""
+    paged cache — since the Pallas kernels went windowed it is OFF the
+    jitted hot path under attn_impl("pim") and survives as the tested
+    bit-identity oracle (the paged kernel performs the same gather inside
+    its index_map without ever building this view)."""
     b, nblk = tables.shape
     _, page, nkv, hd = pages.shape
     g = jnp.take(pages, tables, axis=0)          # [b, nblk, page, nkv, hd]
     return g.reshape(b, nblk * page, nkv, hd)
 
 
+def _fold_query_window(q: jax.Array, nkv: int) -> jax.Array:
+    """[b, t, nH, hd] -> the kernels' [b, nkv, t*g, hd] row layout: rows are
+    (window, group)-row-major within each KV head (row = r * g + gg), the
+    order the windowed kernels' intra-window causal mask assumes."""
+    b, t, nh, hd = q.shape
+    g = nh // nkv
+    qh = q.reshape(b, t, nkv, g, hd).transpose(0, 2, 1, 3, 4)
+    return qh.reshape(b, nkv, t * g, hd)
+
+
+def _unfold_query_window(out: jax.Array, t: int, nh: int) -> jax.Array:
+    """Inverse of `_fold_query_window`: [b, nkv, t*g, hd] -> [b, t, nH, hd]."""
+    b, nkv, tg, hd = out.shape
+    o = out.reshape(b, nkv, t, tg // t, hd).transpose(0, 2, 1, 3, 4)
+    return o.reshape(b, t, nh, hd)
+
+
 def decode_attention_pim_paged(
-    q: jax.Array,        # [b, 1, nH, hd] — single-token decode only
+    q: jax.Array,        # [b, t, nH, hd] — t >= 1 query-window rows
     k_pages: jax.Array,  # [num_pages, page, nKV, hd]
     v_pages: jax.Array,  # [num_pages, page, nKV, hd]
     tables: jax.Array,   # [b, max_blocks] int32 block tables
-    lens: jax.Array,     # [b] valid lengths (new token included)
+    lens: jax.Array,     # [b] valid lengths (ALL t window tokens included)
 ) -> jax.Array:
     """Paged decode attention through the block-table Pallas kernel — the
-    Attn-PIM path over bank-row pages.  Under a mesh the kernel shard_maps
-    over KV heads exactly like the dense `decode_attention_pim` (tables and
-    lens replicate; each head shard holds the full page pool for its
-    heads)."""
+    Attn-PIM path over bank-row pages, for any TLP t >= 1 (plain decode,
+    speculative verify windows, chunked-prefill waves).  The t window rows
+    sit at consecutive absolute positions `lens - t .. lens - 1`
+    (intra-window causal mask inside the kernel); no contiguous page view is
+    ever materialized.  Under a mesh the kernel shard_maps over KV heads
+    exactly like the dense `decode_attention_pim` (tables and lens
+    replicate; each head shard holds the full page pool for its heads)."""
     from repro.kernels.paged_decode_attention import (
         paged_decode_attention, paged_decode_attention_sharded)
     b, t, nh, hd = q.shape
-    assert t == 1, "the flash-decode kernel verifies one token at a time"
     nkv = k_pages.shape[2]
-    qh = q[:, 0].reshape(b, nkv, nh // nkv, hd)
+    qh = _fold_query_window(q, nkv)
     lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
     mesh = current_mesh()
     if mesh is not None:
         out = paged_decode_attention_sharded(qh, k_pages, v_pages, lens,
-                                             tables, mesh=mesh)
+                                             tables, mesh=mesh, q_rows=t)
     else:
-        out = paged_decode_attention(qh, k_pages, v_pages, lens, tables)
-    return out.reshape(b, 1, nh, hd)
+        out = paged_decode_attention(qh, k_pages, v_pages, lens, tables,
+                                     q_rows=t)
+    return _unfold_query_window(out, t, nh)
 
 
 def decode_attention_pim(
-    q: jax.Array,        # [b, 1, nH, hd] — single-token decode only
+    q: jax.Array,        # [b, t, nH, hd] — t >= 1 query-window rows
     k_cache: jax.Array,  # [b, S, nKV, hd]
     v_cache: jax.Array,  # [b, S, nKV, hd]
-    lens: jax.Array,     # [b] valid lengths (new token included)
+    lens: jax.Array,     # [b] valid lengths (ALL t window tokens included)
 ) -> jax.Array:
     """Decode attention through the Pallas flash-decode kernel — the
-    Attn-PIM path.  Under a mesh the kernel is `shard_map`-split over KV
-    heads (one Attn-PIM unit per KV shard, see
+    Attn-PIM path, for any TLP t >= 1 (plain decode, speculative verify
+    windows, chunked-prefill waves).  The t window rows sit at consecutive
+    absolute positions `lens - t .. lens - 1`; the kernel applies the
+    intra-window causal mask.  Under a mesh the kernel is `shard_map`-split
+    over KV heads (one Attn-PIM unit per KV shard, see
     `kernels.decode_attention_sharded`); head layout matches
     `decode_attention_xla`'s GQA grouping (head = kv * group + g)."""
     from repro.kernels.decode_attention import (decode_attention,
                                                 decode_attention_sharded)
     b, t, nh, hd = q.shape
-    assert t == 1, "the flash-decode kernel verifies one token at a time"
     nkv = k_cache.shape[2]
-    qh = q[:, 0].reshape(b, nkv, nh // nkv, hd)
+    qh = _fold_query_window(q, nkv)
     lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (b,))
     mesh = current_mesh()
     if mesh is not None:
-        out = decode_attention_sharded(qh, k_cache, v_cache, lens, mesh=mesh)
+        out = decode_attention_sharded(qh, k_cache, v_cache, lens, mesh=mesh,
+                                       q_rows=t)
     else:
-        out = decode_attention(qh, k_cache, v_cache, lens)
-    return out.reshape(b, 1, nh, hd)
+        out = decode_attention(qh, k_cache, v_cache, lens, q_rows=t)
+    return _unfold_query_window(out, t, nh)

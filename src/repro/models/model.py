@@ -414,6 +414,34 @@ def _apply_positional(cfg: ModelConfig, q, k, positions):
     return q, k
 
 
+def _decode_attention(q, k_cache, v_cache, pos, tables=None):
+    """THE decision point for decode-path attention — plain decode,
+    speculative verify windows, and chunked-prefill waves all land here
+    with a [b, t, nh, hd] query window at consecutive absolute positions
+    ``pos .. pos + t - 1`` (intra-window causal: KV position j is visible
+    to window row r iff j <= pos + r).
+
+    Under `attn_impl("pim")` EVERY case — any t >= 1, dense or paged — runs
+    the Pallas flash-decode kernel (the Attn-PIM unit): dense streams the
+    per-slot slab, paged resolves pages inside the kernel's block-table
+    index_map, so `gather_kv_pages` never appears in a jitted program on
+    this path.  The XLA softmax path (with the page gather when paged)
+    remains as the tested oracle."""
+    t = q.shape[1]
+    if L.current_attn_impl() == "pim":
+        if tables is not None:
+            return L.decode_attention_pim_paged(q, k_cache, v_cache, tables,
+                                                lens=pos + t)
+        return L.decode_attention_pim(q, k_cache, v_cache, lens=pos + t)
+    if tables is not None:
+        # XLA oracle path: gather the slots' pages into a contiguous view
+        # and reuse the dense ragged-masked attention
+        k_cache = L.gather_kv_pages(k_cache, tables)
+        v_cache = L.gather_kv_pages(v_cache, tables)
+    return L.decode_attention_xla(q, k_cache, v_cache,
+                                  cache_len=pos + t, q_offset=pos)
+
+
 def attention_block(
     cfg: ModelConfig,
     p: Mapping[str, Any],
@@ -437,19 +465,7 @@ def attention_block(
         assert kv is not None and pos is not None
         k_cache, v_cache = _write_kv_paged(kv[0], kv[1], k, v, pos, tables,
                                            valid_lens=write_lens)
-        t = q.shape[1]
-        if L.current_attn_impl() == "pim" and t == 1:
-            # the paged flash-decode kernel gathers pages via its
-            # block-table index_map — no contiguous view materialized
-            attn = L.decode_attention_pim_paged(q, k_cache, v_cache, tables,
-                                                lens=pos + 1)
-        else:
-            # XLA path: gather the slots' pages into a contiguous view and
-            # reuse the dense ragged-masked attention
-            kg = L.gather_kv_pages(k_cache, tables)
-            vg = L.gather_kv_pages(v_cache, tables)
-            attn = L.decode_attention_xla(q, kg, vg,
-                                          cache_len=pos + t, q_offset=pos)
+        attn = _decode_attention(q, k_cache, v_cache, pos, tables)
         new_kv = (k_cache, v_cache)
     elif mode == "decode":
         assert kv is not None and pos is not None
@@ -460,16 +476,7 @@ def attention_block(
                                                 write_lens)
         else:
             k_cache, v_cache = _write_kv(kv[0], kv[1], k, v, pos)
-        t = q.shape[1]
-        if L.current_attn_impl() == "pim" and t == 1:
-            # Attn-PIM: the Pallas flash-decode kernel, one unit per KV
-            # shard under a mesh.  TLP>1 verify windows need intra-window
-            # causal masking the single-query kernel doesn't model, so they
-            # stay on the XLA path.
-            attn = L.decode_attention_pim(q, k_cache, v_cache, lens=pos + 1)
-        else:
-            attn = L.decode_attention_xla(q, k_cache, v_cache,
-                                          cache_len=pos + t, q_offset=pos)
+        attn = _decode_attention(q, k_cache, v_cache, pos)
         new_kv = (k_cache, v_cache)
     else:
         attn = L.flash_attention(q, k, v, causal=cfg.causal)

@@ -51,7 +51,9 @@ on finish).  A single request may span nearly the whole pool — context
 length is bounded by pooled memory, not a per-slot slab.  Decode attention
 either gathers pages into the XLA path or — with ``attn_pim=True`` — runs
 the block-table Pallas kernel (`kernels.paged_decode_attention`), which
-resolves pages inside its index_map.  Token streams are identical to the
+resolves pages inside its index_map for ANY TLP (plain decode, speculative
+verify windows, chunked-prefill waves): `gather_kv_pages` never appears in
+a jitted program under attn_pim.  Token streams are identical to the
 dense engine on any workload both can hold (tested).  Per-iteration pool
 stats (pages used/free, watermark, fragmentation) ride on `IterStats`.
 
@@ -98,8 +100,10 @@ becomes mesh-native; ``rules`` defaults to
     legacy host loop) is traced inside ``axis_rules(rules, mesh)``, so the
     `shard()` annotations in the model resolve and GSPMD partitions the
     step.  The "pim" FC path additionally runs `fc_gemv` under `shard_map`
-    (see `models.linear`), and ``attn_pim=True`` routes plain decode through
-    the flash-decode Pallas kernel sharded one unit per KV-head shard.
+    (see `models.linear`), and ``attn_pim=True`` routes every decode-path
+    attention — plain decode, TLP>1 speculative verify windows, and
+    chunked-prefill waves — through the (windowed) flash-decode Pallas
+    kernel sharded one unit per KV-head shard.
 
 The scheduler's per-iteration FC_PU <-> FC_PIM flip keeps working under a
 mesh because the jit caches are keyed on the variant — each (kind, tlp,
@@ -193,9 +197,11 @@ class PapiEngine:
     ``mesh``/``rules`` make the engine mesh-native (see the module
     docstring): params and the KV cache are placed on `serve_rules()`
     shardings and every compiled step runs partitioned.  ``attn_pim=True``
-    additionally moves plain (TLP=1) decode attention onto the Pallas
-    flash-decode kernel — the Attn-PIM unit — sharded per KV shard under a
-    mesh.  `launch.serve` drives both layouts from the CLI."""
+    additionally moves every decode-path attention — plain decode,
+    speculative verify windows (TLP>1), chunked-prefill waves, dense or
+    paged — onto the (windowed) Pallas flash-decode kernel, the Attn-PIM
+    unit, sharded per KV shard under a mesh.  `launch.serve` drives both
+    layouts from the CLI."""
 
     def __init__(
         self,
@@ -380,8 +386,18 @@ class PapiEngine:
             return contextlib.nullcontext()
         return axis_rules(self.rules, self.mesh)
 
+    def _attn_scope(self):
+        """The decode-attention implementation for every compiled entry
+        point: the Pallas flash-decode kernels under ``attn_pim=True`` (any
+        TLP — plain decode, speculative verify windows, and chunked-prefill
+        waves all hit the windowed kernel; the paged XLA page-gather never
+        traces), the XLA softmax path otherwise.  Like `_scope`, tracing
+        reads this at first call, so every jitted CALL must run under it."""
+        return attn_impl("pim" if self.attn_pim else "xla")
+
     def _jit_key(self, kind: str, tlp: int) -> tuple:
-        return (kind, tlp, self.scheduler.fc_assignment, self.pim_interpret)
+        return (kind, tlp, self.scheduler.fc_assignment, self.pim_interpret,
+                self.attn_pim)
 
     def _get_decode(self, which: str):
         """Legacy (unfused) per-call decode step."""
@@ -456,8 +472,11 @@ class PapiEngine:
         cfg = self.draft_cfg if which == "draft" else self.cfg
         # admission usually runs outside any fc_variant context ("pu"), but
         # papi_linear reads the AMBIENT variant at trace time — key on it so
-        # a caller-wrapped engine never reuses a stale executable
-        key = (which, current_fc_variant(), current_fc_interpret())
+        # a caller-wrapped engine never reuses a stale executable.  The attn
+        # impl is keyed too: chunk waves trace the windowed Pallas kernel
+        # under attn_pim.
+        key = (which, current_fc_variant(), current_fc_interpret(),
+               self.attn_pim)
         if key not in self._prefill_jit:
             fn = prefill_to_pages if self.kv is not None else prefill_to_slots
             self._prefill_jit[key] = jax.jit(partial(fn, cfg))
@@ -469,7 +488,8 @@ class PapiEngine:
         each slot's running prompt offset.  Layout-agnostic — the cache
         pytree carries the block tables when paged."""
         cfg = self.draft_cfg if which == "draft" else self.cfg
-        key = ("chunk_" + which, current_fc_variant(), current_fc_interpret())
+        key = ("chunk_" + which, current_fc_variant(),
+               current_fc_interpret(), self.attn_pim)
         if key not in self._prefill_jit:
             self._prefill_jit[key] = jax.jit(partial(prefill_chunk, cfg))
         return self._prefill_jit[key]
@@ -561,7 +581,7 @@ class PapiEngine:
                  "prompt_lens": jnp.asarray(lens)}
         src_dev = jnp.asarray(src)
         self._sync_tables()   # paged: admitted rows just mapped their pages
-        with self._scope():
+        with self._scope(), self._attn_scope():
             first, self.cache = self._get_prefill("main")(
                 self.params, batch, self.cache, src_dev)
             if self.draft_cfg is not None:
@@ -591,7 +611,7 @@ class PapiEngine:
                     final.append(slot)
                     del pending[slot]
             ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
-            with self._scope():
+            with self._scope(), self._attn_scope():
                 nxt, self.cache = self._get_chunk("main")(
                     self.params, self.cache, ct, cl)
                 if self.draft_cfg is not None:
@@ -637,7 +657,7 @@ class PapiEngine:
         tlp = self.spec_len
         with self._scope(), \
                 fc_variant(variant, interpret=self.pim_interpret), \
-                attn_impl("pim" if self.attn_pim else "xla"):
+                self._attn_scope():
             if tlp <= 1 or self.draft_cfg is None:
                 last = jnp.asarray(self.slot_last)
                 if self.fused:

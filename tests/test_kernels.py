@@ -87,6 +87,97 @@ def test_decode_attention_block_skip_bit_identical(dtype):
         **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,nkv,g,hd,skv,block_k,t",
+    [
+        (2, 2, 4, 64, 256, 128, 2),    # TLP=2 verify window
+        (3, 1, 12, 64, 384, 128, 4),   # extreme GQA, spec window
+        (1, 4, 1, 128, 512, 256, 3),   # MHA (g=1), odd window
+        (2, 2, 7, 128, 256, 256, 8),   # chunk-wave-sized window, odd group
+    ],
+)
+def test_decode_attention_windowed_sweep(b, nkv, g, hd, skv, block_k, t,
+                                         dtype):
+    """Query windows (TLP>1): the kernel's intra-window causal mask vs the
+    pure-jnp oracle, across GQA ratios and ragged per-request lengths."""
+    keys = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = jax.random.normal(keys[0], (b, nkv, t * g, hd), dtype)
+    k = jax.random.normal(keys[1], (b, skv, nkv, hd), dtype)
+    v = jax.random.normal(keys[2], (b, skv, nkv, hd), dtype)
+    # lens >= t: every window row keeps at least its own diagonal position
+    lens = jax.random.randint(keys[3], (b,), t, skv + 1)
+    got = decode_attention(q, k, v, lens, block_k=block_k, interpret=True,
+                           q_rows=t)
+    want = ref.decode_attention_window_ref(q, k, v, lens, q_rows=t)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+def test_decode_attention_windowed_causal_within_window():
+    """Row r must not see KV written for later window rows: perturbing KV at
+    positions past row r's own leaves rows 0..r bit-unchanged."""
+    b, nkv, g, hd, skv, t = 1, 2, 2, 64, 256, 4
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(keys[0], (b, nkv, t * g, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (b, skv, nkv, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (b, skv, nkv, hd), jnp.float32)
+    lens = jnp.array([100], jnp.int32)        # window rows at 96..99
+    out = decode_attention(q, k, v, lens, block_k=128, interpret=True,
+                           q_rows=t)
+    for r in range(t):
+        pos_r = 100 - t + r                   # row r's absolute position
+        k2 = k.at[:, pos_r + 1:].set(999.0)
+        v2 = v.at[:, pos_r + 1:].set(-999.0)
+        out2 = decode_attention(q, k2, v2, lens, block_k=128, interpret=True,
+                                q_rows=t)
+        # rows 0..r (kernel rows 0..(r+1)*g-1) see nothing past pos_r
+        np.testing.assert_array_equal(
+            np.asarray(out[:, :, : (r + 1) * g]),
+            np.asarray(out2[:, :, : (r + 1) * g]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_windowed_block_skip_bit_identical(dtype):
+    """Ragged block skipping must stay bit-exact for query windows: the
+    clamp keys on the full window length, and fully-masked tiles contribute
+    exactly nothing to every row."""
+    b, nkv, g, hd, skv, block_k, t = 5, 2, 4, 64, 512, 128, 3
+    keys = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(keys[0], (b, nkv, t * g, hd), dtype)
+    k = jax.random.normal(keys[1], (b, skv, nkv, hd), dtype)
+    v = jax.random.normal(keys[2], (b, skv, nkv, hd), dtype)
+    lens = jnp.array([3, 128, 200, 511, 512], jnp.int32)
+    skip = decode_attention(q, k, v, lens, block_k=block_k, interpret=True,
+                            block_skip=True, q_rows=t)
+    full = decode_attention(q, k, v, lens, block_k=block_k, interpret=True,
+                            block_skip=False, q_rows=t)
+    np.testing.assert_array_equal(
+        np.asarray(skip, np.float32), np.asarray(full, np.float32))
+    want = ref.decode_attention_window_ref(q, k, v, lens, q_rows=t)
+    np.testing.assert_allclose(
+        np.asarray(skip, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+def test_decode_attention_window_matches_xla_layer_path():
+    """The [b, t, nH, hd] wrapper (`layers.decode_attention_pim`) against
+    `layers.decode_attention_xla` — the routing-level oracle pair that
+    attention_block dispatches between."""
+    from repro.models.layers import decode_attention_pim, decode_attention_xla
+    b, t, nh, nkv, hd, skv = 3, 4, 6, 2, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, t, nh, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, nkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, nkv, hd), jnp.float32)
+    pos = jnp.asarray([0, 17, 124], jnp.int32)   # incl. pos=0 and near-full
+    want = decode_attention_xla(q, k, v, cache_len=pos + t, q_offset=pos)
+    got = decode_attention_pim(q, k, v, lens=pos + t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # fc_gemv
 # ---------------------------------------------------------------------------

@@ -1,13 +1,17 @@
 """Paged KV-cache serving tests: token identity with the dense engine,
 the paged-only long-context scenario, and the block-table Pallas kernel.
 
-The contract under test (ISSUE 3 acceptance):
+The contract under test (ISSUE 3 + ISSUE 5 acceptance):
   * on any workload BOTH layouts can hold, the paged engine emits token
     streams identical to the dense engine — greedy and speculative;
   * a request whose prompt+generation exceeds the dense per-slot capacity
     completes under the paged layout (pooled pages, no uniform slot cap);
   * the paged flash-decode kernel is bit-identical to the dense kernel on
-    identical KV contents (same body, block_k = page_size);
+    identical KV contents (same body, block_k = page_size) — for every
+    query-window width t (plain decode, TLP>1 verify, chunk waves);
+  * under attn_pim the WINDOWED kernel serves speculative verify and
+    chunked prefill too, token-identically to the XLA engines, and
+    `gather_kv_pages` never traces (poison-tested);
   * prompt truncation is GONE: prompts longer than the prefill window are
     chunked through it and complete in full (ServeResult.prompt_truncated
     is deprecated and always False);
@@ -201,6 +205,58 @@ def test_paged_attn_pim_kernel_path_matches_xla(small_model):
     assert got == want
 
 
+def test_paged_speculative_attn_pim_matches_dense(small_model, draft_model):
+    """THE ISSUE 5 path: speculative verify windows (TLP=3) over the paged
+    layout through the WINDOWED block-table kernel — draft steps, verify
+    windows, accept/rewind — must emit the dense XLA engine's exact
+    tokens, and drain the pool."""
+    cfg, params = small_model
+    want, _ = _run(cfg, params, MIXED, spec_len=3, draft=draft_model)
+    got, eng = _run(cfg, params, MIXED, spec_len=3, draft=draft_model,
+                    kv_layout="paged", page_size=8, attn_pim=True)
+    assert got == want
+    _assert_drained(eng)
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_chunked_prefill_attn_pim_matches_xla(small_model, kv_layout):
+    """Chunked admission under attn_pim: every chunk wave is a query
+    window through the windowed kernel (t = prefill_len, per-slot masked
+    writes), and the streams must match the XLA-path engine's — long and
+    short prompts alike."""
+    cfg, params = small_model
+    kw = dict(kv_layout="paged", page_size=8) if kv_layout == "paged" else {}
+    reqs = [(list(range(3, 3 + 20)), 4), ([3, 5], 4),
+            (list(range(5, 5 + 30)), 3)]
+    want, _ = _run(cfg, params, reqs, **kw)
+    got, _ = _run(cfg, params, reqs, attn_pim=True, **kw)
+    assert got == want
+
+
+def test_no_page_gather_traced_under_attn_pim(small_model, draft_model,
+                                              monkeypatch):
+    """ISSUE 5 acceptance: with attn_pim active, NO jitted decode / verify
+    / chunk program may call `gather_kv_pages` — the paged kernel resolves
+    pages inside its index_map.  Poison the gather and run the full
+    gauntlet (chunked admission, plain decode, speculative draft+verify):
+    a single traced gather raises."""
+    from repro.models import layers
+
+    def boom(pages, tables):
+        raise AssertionError(
+            "gather_kv_pages traced on the attn_pim hot path")
+
+    cfg, params = small_model
+    reqs = [(list(range(3, 3 + 20)), 5), ([3, 5, 7], 6)]
+    kw = dict(kv_layout="paged", page_size=8, spec_len=3, draft=draft_model,
+              eos_token=NO_EOS)
+    want, _ = _run(cfg, params, reqs, **kw)          # XLA gather path
+    monkeypatch.setattr(layers, "gather_kv_pages", boom)
+    got, eng = _run(cfg, params, reqs, attn_pim=True, **kw)
+    assert got == want
+    _assert_drained(eng)
+
+
 def test_paged_iter_stats_surface_pool_state(small_model):
     cfg, params = small_model
     _, eng = _run(cfg, params, MIXED, kv_layout="paged", page_size=16)
@@ -242,15 +298,19 @@ def test_long_prompts_complete_untruncated(small_model, kv_layout):
         assert results[i].tokens == oneshot[i].tokens
 
 
-def test_paged_kernel_bit_identical_to_dense_kernel():
+@pytest.mark.parametrize("t", [1, 2, 4])
+def test_paged_kernel_bit_identical_to_dense_kernel(t):
     """Identical KV contents scattered across a shuffled page pool: the
     paged kernel (block-table index_map) must be BIT-identical to the
-    dense kernel at block_k = page_size — the body is the same code."""
+    dense kernel at block_k = page_size — the body is the same code.
+    Holds for every query-window width: t=1 plain decode, t=2, and a
+    spec-window t=4 (the windowed rows share the body's intra-window
+    mask)."""
     b, nkv, g, hd, page, nblk = 3, 2, 4, 64, 32, 6
     S = page * nblk
     num_pages = b * nblk + 1
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    q = jax.random.normal(ks[0], (b, nkv, g, hd), jnp.float32)
+    q = jax.random.normal(ks[0], (b, nkv, t * g, hd), jnp.float32)
     kd = jax.random.normal(ks[1], (b, S, nkv, hd), jnp.float32)
     vd = jax.random.normal(ks[2], (b, S, nkv, hd), jnp.float32)
     lens = jnp.asarray([33, S, 7], jnp.int32)   # ragged: mid, full, tiny
@@ -266,21 +326,50 @@ def test_paged_kernel_bit_identical_to_dense_kernel():
 
     for skip in (True, False):
         want = decode_attention(q, kd, vd, lens, block_k=page,
-                                interpret=True, block_skip=skip)
+                                interpret=True, block_skip=skip, q_rows=t)
         got = paged_decode_attention(q, jnp.asarray(kp), jnp.asarray(vp),
                                      lens, jnp.asarray(tables),
-                                     interpret=True, block_skip=skip)
+                                     interpret=True, block_skip=skip,
+                                     q_rows=t)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def test_paged_kernel_garbage_table_entries_masked():
+def test_paged_windowed_kernel_matches_gather_oracle():
+    """The windowed paged kernel vs the exact hot path it replaced:
+    `gather_kv_pages` + the XLA windowed softmax.  Greedy-level agreement
+    is what the engine gates assert; here the raw outputs must agree to
+    f32 tolerance across ragged lens and a shuffled pool."""
+    from repro.models.layers import (decode_attention_pim_paged,
+                                     decode_attention_xla, gather_kv_pages)
+    b, t, nh, nkv, hd, page, nblk = 3, 3, 4, 2, 32, 16, 5
+    num_pages = b * nblk + 1
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (b, t, nh, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, page, nkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, page, nkv, hd), jnp.float32)
+    rng = np.random.default_rng(2)
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, num_pages)).reshape(b, nblk), jnp.int32)
+    lens = jnp.asarray([t, 37, page * nblk], jnp.int32)   # min, mid, full
+    pos = lens - t
+    kg, vg = gather_kv_pages(kp, tables), gather_kv_pages(vp, tables)
+    want = decode_attention_xla(q, kg, vg, cache_len=lens, q_offset=pos)
+    got = decode_attention_pim_paged(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("t", [1, 3])
+def test_paged_kernel_garbage_table_entries_masked(t):
     """Entries at/past a request's last valid block may point anywhere
     (the engine points them at the garbage page) — they must not leak into
-    the output, skipping on or off."""
+    the output, skipping on or off, single-query or windowed (a window's
+    rows mask everything past their own position, so garbage never leaks
+    backward into any row)."""
     b, nkv, g, hd, page, nblk = 2, 2, 2, 32, 16, 4
     num_pages = b * nblk + 1
     ks = jax.random.split(jax.random.PRNGKey(3), 3)
-    q = jax.random.normal(ks[0], (b, nkv, g, hd), jnp.float32)
+    q = jax.random.normal(ks[0], (b, nkv, t * g, hd), jnp.float32)
     kp = jax.random.normal(ks[1], (num_pages, page, nkv, hd), jnp.float32)
     vp = jax.random.normal(ks[2], (num_pages, page, nkv, hd), jnp.float32)
     lens = jnp.asarray([20, 7], jnp.int32)      # 2 blocks / 1 block valid
@@ -290,7 +379,7 @@ def test_paged_kernel_garbage_table_entries_masked():
     scrubbed[1, 1:] = 0
     for skip in (True, False):
         a = paged_decode_attention(q, kp, vp, lens, jnp.asarray(tables),
-                                   interpret=True, block_skip=skip)
+                                   interpret=True, block_skip=skip, q_rows=t)
         c = paged_decode_attention(q, kp, vp, lens, jnp.asarray(scrubbed),
-                                   interpret=True, block_skip=skip)
+                                   interpret=True, block_skip=skip, q_rows=t)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(c))

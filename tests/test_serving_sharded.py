@@ -146,6 +146,67 @@ def test_decode_attention_sharded_indivisible_heads_fall_back():
 
 
 @needs8
+def test_decode_attention_sharded_windowed_bit_identical():
+    """Query windows under the KV-head shard_map (TLP>1 verify form): each
+    shard masks its own heads' window rows locally, no cross-shard term —
+    bit-identical to the unsharded windowed kernel."""
+    from repro.kernels import decode_attention, decode_attention_sharded
+    b, nkv, g, hd, skv, t = 2, 8, 2, 32, 128, 3
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, nkv, t * g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, nkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, nkv, hd), jnp.float32)
+    lens = jnp.asarray([37, 128], jnp.int32)
+    got = decode_attention_sharded(q, k, v, lens, mesh=_mesh(1, 8),
+                                   block_k=32, interpret=True, q_rows=t)
+    want = decode_attention(q, k, v, lens, block_k=32, interpret=True,
+                            q_rows=t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@needs8
+def test_paged_decode_attention_sharded_windowed_bit_identical():
+    """The windowed paged kernel under the KV-head shard_map: tables/lens
+    replicate, each shard streams its heads' pages for all t window rows —
+    bit-identical to the unsharded windowed paged kernel."""
+    from repro.kernels import (paged_decode_attention,
+                               paged_decode_attention_sharded)
+    b, nkv, g, hd, page, nblk, t = 2, 8, 2, 32, 16, 4, 3
+    num_pages = b * nblk + 1
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (b, nkv, t * g, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, page, nkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, page, nkv, hd), jnp.float32)
+    lens = jnp.asarray([37, 64], jnp.int32)
+    tables = jnp.asarray(
+        np.arange(1, num_pages).reshape(b, nblk), jnp.int32)
+    got = paged_decode_attention_sharded(q, kp, vp, lens, tables,
+                                         mesh=_mesh(1, 8), interpret=True,
+                                         q_rows=t)
+    want = paged_decode_attention(q, kp, vp, lens, tables, interpret=True,
+                                  q_rows=t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@needs8
+def test_spec_attn_pim_paged_mesh_matches_unsharded_dense(small_model):
+    """The full ISSUE 5 composition: speculative verify windows + paged KV
+    + the windowed block-table kernel + a (1, 2) KV-head mesh — token
+    streams must equal the 1-device dense XLA engine's."""
+    cfg, params = small_model
+    draft_cfg = get_config("qwen2-0.5b").reduced()
+    draft_params = init_params(draft_cfg, jax.random.PRNGKey(9))
+    reqs = REQS[:3]
+    want, _ = _run(cfg, params, reqs, spec_len=3,
+                   draft=(draft_cfg, draft_params))
+    got, eng = _run(cfg, params, reqs, spec_len=3,
+                    draft=(draft_cfg, draft_params), kv_layout="paged",
+                    page_size=16, attn_pim=True, mesh=_mesh(1, 2))
+    assert eng.mesh is not None and eng.kv is not None
+    assert got == want
+
+
+@needs8
 def test_attn_pim_engine_sharded_matches_unsharded(small_model):
     """The engine's Attn-PIM path (flash-decode kernel) under a (1, 2) mesh —
     exactly one KV head per shard for this GQA config — emits the same

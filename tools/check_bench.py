@@ -1,0 +1,90 @@
+"""BENCH regression gate: fail CI when the tracked benchmark file regresses.
+
+Two checks over BENCH_engine.json (written/merged by
+`benchmarks/engine_hotpath.py`):
+
+  1. every ``tokens_bit_identical`` flag, anywhere in the file, is true —
+     the A/B sections (--mesh, --kv paged, --long-prompt, the
+     paged_spec_attn_pim kernel A/B) gate their own runs, but this catches
+     a stale file whose sections were merged across runs;
+  2. ``paged.modes.speculative.paged_tok_per_s`` stays at or above
+     PAGED_SPEC_FLOOR of the dense speculative baseline recorded in the
+     same section — the regression this guards is the one ISSUE 5 closed:
+     speculative verify windows falling off the kernel/equal-context path
+     and back onto a pool-wide `gather_kv_pages` view per decode step.
+
+Usage:  python tools/check_bench.py [path/to/BENCH_engine.json]
+Exits non-zero with a message on the first violated check.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+# paged speculative must hold >= 80% of the dense speculative tok/s
+# recorded in the same BENCH section (acceptance measured ~0.98x; 0.8
+# leaves headroom for CI-runner noise without letting the gather creep
+# back)
+PAGED_SPEC_FLOOR = 0.8
+
+
+def iter_identity_flags(node, path=""):
+    if isinstance(node, dict):
+        for key, val in node.items():
+            sub = f"{path}.{key}" if path else key
+            if key == "tokens_bit_identical":
+                yield sub, val
+            else:
+                yield from iter_identity_flags(val, sub)
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            yield from iter_identity_flags(val, f"{path}[{i}]")
+
+
+def main() -> int:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else (
+        Path(__file__).resolve().parent.parent / "BENCH_engine.json")
+    if not path.exists():
+        print(f"check_bench: {path} not found (run "
+              "benchmarks/engine_hotpath.py first)")
+        return 1
+    bench = json.loads(path.read_text())
+
+    failures = []
+    flags = list(iter_identity_flags(bench))
+    if not flags:
+        failures.append("no tokens_bit_identical flags found — the A/B "
+                        "sections are missing")
+    for where, ok in flags:
+        if ok is not True:
+            failures.append(f"{where} is {ok!r} (token streams diverged)")
+
+    try:
+        spec = bench["paged"]["modes"]["speculative"]
+        paged, dense = spec["paged_tok_per_s"], spec["dense_tok_per_s"]
+    except KeyError as missing:
+        failures.append(f"paged.modes.speculative section incomplete "
+                        f"(missing {missing})")
+    else:
+        if paged < PAGED_SPEC_FLOOR * dense:
+            failures.append(
+                f"paged speculative regressed: {paged:.1f} tok/s < "
+                f"{PAGED_SPEC_FLOOR:.0%} of the dense baseline "
+                f"{dense:.1f} tok/s (ratio {paged / dense:.2f})")
+        else:
+            print(f"paged speculative: {paged:.1f} tok/s = "
+                  f"{paged / dense:.2f}x dense ({dense:.1f} tok/s), floor "
+                  f"{PAGED_SPEC_FLOOR:.2f} — OK")
+
+    if failures:
+        for f in failures:
+            print(f"check_bench FAIL: {f}")
+        return 1
+    print(f"check_bench: {len(flags)} identity flags true, paged "
+          "speculative above floor")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
