@@ -58,10 +58,21 @@ every token stream (a short <= window prompt included) is bit-identical
 across the two: chunking must change compile-shape economics, never
 tokens.
 
+``--pressure`` runs an oversubscribed paged trace (6x more page demand
+than the pool holds, preemption enabled) against the unconstrained dense
+reference: every request must COMPLETE with a bounded first-admission
+delay — the pre-preemption engine deferred the head of the queue
+indefinitely under a held pool — and the token streams must stay
+bit-identical to the reference, both for requests that were never
+preempted (the gate `tools/check_bench.py` enforces) and for the
+preempted ones (requeue recomputes `prompt + tokens-so-far` through
+chunked prefill).  Merges a "pressure" section into BENCH_engine.json.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
         PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
         PYTHONPATH=src python benchmarks/engine_hotpath.py --kv paged
         PYTHONPATH=src python benchmarks/engine_hotpath.py --long-prompt
+        PYTHONPATH=src python benchmarks/engine_hotpath.py --pressure
 """
 from __future__ import annotations
 
@@ -159,10 +170,18 @@ def main() -> int:
                          "any token stream differs (short prompts included "
                          "— they must be bit-identical to the pre-chunking "
                          "path)")
+    ap.add_argument("--pressure", action="store_true",
+                    help="oversubscribed paged trace (pool holds ~1/6 of "
+                         "the requested pages, preemption enabled) vs the "
+                         "unconstrained dense reference; merges a "
+                         "'pressure' section into --out and exits 1 unless "
+                         "every request completes with its reference token "
+                         "stream (never-preempted AND preempted)")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
 
-    if sum((bool(args.mesh), args.kv == "paged", args.long_prompt)) > 1:
+    if sum((bool(args.mesh), args.kv == "paged", args.long_prompt,
+            args.pressure)) > 1:
         # each mode is its own early-returning A/B section; combining them
         # would silently skip the other mode's identity gate
         print("--mesh / --kv paged / --long-prompt are separate A/B modes: "
@@ -238,6 +257,75 @@ def main() -> int:
         if not identical:
             print("WARNING: chunked admission diverged from the one-shot "
                   "prefill token streams")
+            return 1
+        return 0
+
+    if args.pressure:
+        # Oversubscribed serving: 12 requests whose page budgets total 6x
+        # the pool.  The pre-preemption engine deferred the queue head
+        # indefinitely while two long-running requests held the pool; with
+        # pool-pressure preemption the head is admitted within
+        # `preempt_after` iterations of its first deferral, every request
+        # completes, and the streams stay bit-identical to the
+        # unconstrained dense reference — preempted requests included
+        # (their requeue recomputes prompt + tokens-so-far through chunked
+        # prefill).  First-admission delay (admit iteration - submit
+        # iteration) is the bounded-wait metric check_bench gates.
+        from repro.serving import PapiEngine, ServeRequest
+        eos = cfg.vocab_size - 1      # never fires with random-init weights
+        reqs = [([3 + i, 5, 7], 20) for i in range(12)]
+
+        def serve(**kw):
+            eng = PapiEngine(cfg, params, max_slots=4, prefill_len=8,
+                             alpha=6.0, eos_token=eos, fused=True, **kw)
+            for i, (prompt, n) in enumerate(reqs):
+                eng.submit(ServeRequest(i, list(prompt), max_new_tokens=n))
+            return {r.req_id: r for r in eng.run(max_iterations=2000)}, eng
+
+        want, _ = serve(cache_capacity=64)
+        got, eng = serve(cache_capacity=16, kv_layout="paged", page_size=4,
+                         preempt_after=3, debug_invariants=True)
+
+        completed = sum(r.finished_reason == "length" and len(r.tokens) == 20
+                        for r in got.values())
+        never = [i for i in got if i not in eng.preempted_ids]
+        never_ok = all(got[i].tokens == want[i].tokens for i in never)
+        preempted_ok = all(got[i].tokens == want[i].tokens
+                           for i in eng.preempted_ids)
+        delays = sorted(eng.admit_iteration[i] - eng.submit_iteration[i]
+                        for i in got)
+        pct = lambda q: delays[min(len(delays) - 1,
+                                   int(q * (len(delays) - 1) + 0.999))]
+        section = {
+            "requests": len(reqs),
+            "pool_pages": eng.kv.alloc.num_pages,
+            "pages_demanded": len(reqs) * eng.kv.pages_for(3 + 20 + 1),
+            "preempt_after": 3,
+            "preemptions": eng.preemptions,
+            "completed": completed,
+            "iterations": eng.iteration,
+            "admission_delay_p50": pct(0.50),
+            "admission_delay_p99": pct(0.99),
+            "admission_delay_max": delays[-1],
+            # the check_bench-gated flag: never-preempted requests match
+            # the unconstrained reference bit for bit
+            "tokens_bit_identical": never_ok,
+            "preempted_tokens_bit_identical": preempted_ok,
+        }
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["pressure"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"pressure: {completed}/{len(reqs)} completed over a "
+              f"{section['pages_demanded']}/{section['pool_pages']}-page "
+              f"oversubscription, {eng.preemptions} preemptions, admission "
+              f"delay p50/p99/max = {pct(0.5)}/{pct(0.99)}/{delays[-1]} "
+              f"iterations, identical (never-preempted/preempted): "
+              f"{never_ok}/{preempted_ok}")
+        print(f"wrote {out}")
+        if completed < len(reqs) or not (never_ok and preempted_ok):
+            print("WARNING: oversubscribed trace lost requests or diverged "
+                  "from the reference streams")
             return 1
         return 0
 

@@ -36,6 +36,13 @@ available) — per-request context is bounded by the pool, not a uniform
 slot.  Token streams are identical to ``--kv dense`` on any workload both
 layouts can hold.  Composes with ``--attn-pim`` (block-table Pallas
 kernel) and ``--mesh`` (KV-head-sharded paged pools).
+
+Failure model: ``--deadline S`` bounds every request's wall clock (expired
+requests finish with ``finished_reason="timeout"`` and their tokens-so-far),
+and ``--fault kind[:prob]`` (repeatable; ``--fault-seed``) injects a
+deterministic schedule of admission failures / NaN logits / kernel
+corruption / step latency to exercise the engine's graceful-degradation
+paths — see docs/ARCHITECTURE.md, "Failure model & graceful degradation".
 """
 from __future__ import annotations
 
@@ -75,6 +82,21 @@ def main() -> None:
                          "the XLA oracle path's gathered KV view (the "
                          "--attn-pim kernel never gathers); default = "
                          "the whole pool")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SECONDS",
+                    help="per-request wall-clock budget from submit(); an "
+                         "expired request finishes honestly with "
+                         "finished_reason='timeout' and its tokens-so-far")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="KIND[:PROB]",
+                    help="inject a deterministic fault schedule (repeatable): "
+                         "kinds admit / nan / kernel / latency, per-iteration "
+                         "probability PROB (default 1.0).  E.g. "
+                         "'--fault nan:0.2 --fault admit:0.5'.  The engine "
+                         "degrades gracefully instead of emitting garbage — "
+                         "see docs/ARCHITECTURE.md, 'Failure model'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault schedule (a pure function of "
+                         "(seed, iteration), so runs replay exactly)")
     args = ap.parse_args()
 
     # Mesh sizing must happen before the first jax backend touch, hence the
@@ -91,7 +113,7 @@ def main() -> None:
     from repro.core.traces import generate_trace
     from repro.launch.mesh import make_serving_mesh
     from repro.models import init_params
-    from repro.serving import PapiEngine, ServeRequest
+    from repro.serving import PapiEngine, ServeRequest, parse_fault_specs
 
     mesh = None
     if mesh_shape is not None:
@@ -119,6 +141,7 @@ def main() -> None:
         draft=draft, mesh=mesh, attn_pim=args.attn_pim,
         kv_layout=args.kv, page_size=args.page_size,
         max_blocks=args.max_blocks,
+        faults=parse_fault_specs(args.fault, seed=args.fault_seed),
     )
     rng = np.random.default_rng(args.seed)
     # Prompts are no longer clamped to the prefill window — admission chunks
@@ -132,14 +155,23 @@ def main() -> None:
         prompt = rng.integers(3, cfg.vocab_size,
                               size=min(req.input_len, max_prompt))
         eng.submit(ServeRequest(i, prompt.tolist(),
-                                max_new_tokens=min(req.output_len, 64)))
+                                max_new_tokens=min(req.output_len, 64),
+                                deadline_s=args.deadline))
 
     results = eng.run(max_iterations=2000)
-    rejected = sum(r.finished_reason == "rejected" for r in results)
-    print(f"\ncompleted {len(results) - rejected} requests in "
+    by_reason: dict[str, int] = {}
+    for r in results:
+        by_reason[r.finished_reason] = by_reason.get(r.finished_reason, 0) + 1
+    unhappy = sum(by_reason.get(k, 0)
+                  for k in ("rejected", "timeout", "cancelled", "aborted"))
+    print(f"\ncompleted {len(results) - unhappy} requests in "
           f"{eng.iteration} iterations"
-          + (f" ({rejected} rejected: over the KV budget)" if rejected
-             else ""))
+          + (f" (unhappy: { {k: v for k, v in sorted(by_reason.items()) if k not in ('eos', 'length')} })"
+             if unhappy else ""))
+    if eng.preemptions or eng.degraded_steps or args.fault:
+        fired = (dict(eng.faults.counts) if eng.faults is not None else {})
+        print(f"resilience: {eng.preemptions} preemptions, "
+              f"{eng.degraded_steps} degraded steps, faults fired {fired}")
     tok = sum(len(r.tokens) for r in results)
     wall = sum(s.wall_s for s in eng.stats)
     print(f"tokens: {tok}  wall: {wall:.2f}s  tok/s: {tok / max(wall, 1e-9):.1f}")

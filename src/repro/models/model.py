@@ -909,6 +909,14 @@ def prefill_chunk(cfg, params, cache, tokens, chunk_lens):
     following the last valid position of slot s's chunk — the request's
     first output token when this was its final chunk (garbage for rows with
     ``chunk_lens[s] == 0``; the engine only reads rows it finalized).
+
+    Bit-identity contract: a prompt admitted through these waves produces
+    exactly the one-shot prefill's logits (asserted against the raw-model
+    oracle in `tests/test_serving_chunked.py`).  The engine's preemption
+    path leans on this — a preempted request is requeued as
+    ``prompt + tokens-so-far`` and recomputed through THIS entry point, so
+    its continuation token equals the decode step the preemption skipped
+    and the caller-visible stream is unchanged.
     """
     b, t = tokens.shape
     pos = cache["pos"]

@@ -1,8 +1,12 @@
-from repro.serving.engine import IterStats, PapiEngine, ServeRequest, ServeResult
+from repro.serving.engine import (AllocatorInvariantError, EngineStallError,
+                                  IterStats, PapiEngine, ServeRequest,
+                                  ServeResult)
+from repro.serving.faults import FaultInjector, parse_fault_specs
 from repro.serving.kv_pages import (BlockTables, PageAllocator, PagedKVManager,
                                     PageStats)
 from repro.serving.sampler import greedy, sample
 
-__all__ = ["BlockTables", "IterStats", "PageAllocator", "PagedKVManager",
+__all__ = ["AllocatorInvariantError", "BlockTables", "EngineStallError",
+           "FaultInjector", "IterStats", "PageAllocator", "PagedKVManager",
            "PageStats", "PapiEngine", "ServeRequest", "ServeResult",
-           "greedy", "sample"]
+           "greedy", "parse_fault_specs", "sample"]

@@ -57,6 +57,45 @@ a jitted program under attn_pim.  Token streams are identical to the
 dense engine on any workload both can hold (tested).  Per-iteration pool
 stats (pages used/free, watermark, fragmentation) ride on `IterStats`.
 
+Failure model & graceful degradation
+------------------------------------
+The engine degrades instead of livelocking or emitting garbage (see
+docs/ARCHITECTURE.md for the full policy):
+
+  * **pool-pressure preemption** — when paged admission has deferred the
+    head of the queue for ``preempt_after`` consecutive iterations (or the
+    pool occupancy crosses ``preempt_watermark`` while a deferral is
+    pending), the YOUNGEST in-flight request is preempted: its pages are
+    released and it is requeued at the back as ``prompt + tokens-so-far``,
+    which chunked prefill recomputes bit-identically (the requeued
+    request's first output token is exactly the decode step the preemption
+    skipped).  The oldest in-flight request is never preempted, so it
+    always runs to completion and the head of the queue always admits in
+    bounded time — no livelock.
+  * **deadlines and cancellation** — ``ServeRequest.deadline_s`` bounds a
+    request's wall-clock time from submit(); `cancel(req_id)` works on
+    queued and in-flight requests alike.  Both finish honestly
+    (``finished_reason="timeout"/"cancelled"``) with tokens-so-far and
+    drain their pages/reservations.
+  * **finite-logits guard** — every fused decode step checks its logits
+    for NaN/Inf ON DEVICE; a poisoned step is discarded (the functional
+    cache update is simply not assigned) and the iteration re-runs on the
+    tested XLA oracle path — unfused plain decode, "pu" FC, XLA attention
+    — with the speculation window clamped to 1 for that step
+    (`IterStats.degraded`).  `serving.faults.FaultInjector` forces this
+    path (and admission failure / artificial latency) deterministically.
+  * **no-progress watchdog** — ``stall_limit`` consecutive iterations in
+    which nothing was admitted, decoded, finished, or preempted while work
+    is pending raise `EngineStallError` carrying a pool/queue/slot
+    snapshot, instead of spinning silently to ``max_iterations``.  `run()`
+    exhaustion itself no longer drops in-flight requests: they are
+    returned as ``finished_reason="aborted"`` results with tokens-so-far,
+    pages released.
+  * **invariant checking** — ``debug_invariants=True`` runs the page
+    allocator's `check()` every iteration and turns a violation into
+    `AllocatorInvariantError` with the allocator snapshot attached (the
+    whole serving test suite runs with the flag on).
+
 Device-resident hot path
 ------------------------
 PAPI's premise is that the per-iteration scheduling decision is O(1) and a
@@ -148,6 +187,7 @@ from repro.models import (cache_shardings, decode_step, init_cache,
                           prefill_to_slots)
 from repro.models.layers import attn_impl
 from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
+from repro.serving.faults import FAULT_INF, FAULT_NAN, FAULT_NONE, FaultInjector
 from repro.serving.kv_pages import PagedKVManager
 from repro.serving.sampler import accept_speculative, greedy
 
@@ -157,6 +197,10 @@ class ServeRequest:
     req_id: int
     prompt: list[int]
     max_new_tokens: int
+    # wall-clock budget in seconds, measured from submit(); None = unbounded.
+    # An expired request finishes with finished_reason="timeout" and its
+    # tokens-so-far at the next step boundary.
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -166,11 +210,53 @@ class ServeResult:
     prompt_len: int
     iterations: int
     finished_reason: str = "length"
-    # DEPRECATED: prompts are never truncated anymore — admission chunks any
-    # prompt through the compiled prefill window (see the module docstring)
-    # and rejects honestly when a prompt cannot fit the KV budget at all.
-    # Always False; kept one release for callers that read it.
-    prompt_truncated: bool = False
+
+
+@dataclasses.dataclass
+class _ResumedRequest:
+    """Internal requeue record for a preempted request: the original prompt
+    extended with every token already emitted, so chunked admission
+    recomputes the KV bit-identically and the continuation's first output
+    token is exactly the decode step the preemption skipped.  The caller's
+    `ServeRequest` is never touched; `done` / `orig_prompt_len` let result
+    emission reassemble the caller-visible stream."""
+    req_id: int
+    prompt: list[int]          # original prompt + tokens emitted so far
+    max_new_tokens: int        # remaining generation budget
+    deadline_s: float | None
+    done: list[int]            # tokens emitted before the preemption(s)
+    orig_prompt_len: int
+
+
+class EngineStallError(RuntimeError):
+    """`run()` made no progress — nothing admitted, decoded, finished, or
+    preempted — for `stall_limit` consecutive iterations while requests
+    were still pending.  ``snapshot`` carries the pool/queue/slot state at
+    the stall (see `PapiEngine._snapshot`)."""
+
+    def __init__(self, message: str, snapshot: dict):
+        super().__init__(message)
+        self.snapshot = snapshot
+
+
+class AllocatorInvariantError(RuntimeError):
+    """A `debug_invariants=True` engine caught the page allocator violating
+    its invariants (double-map / leak / over-reservation).  ``snapshot``
+    carries the engine + allocator state at the violation."""
+
+    def __init__(self, message: str, snapshot: dict):
+        super().__init__(message)
+        self.snapshot = snapshot
+
+
+def _inject_fault(logits, code):
+    """Apply the iteration's fault code (a traced int32 scalar) to the
+    logits inside the jitted step: FAULT_NAN poisons with NaN, FAULT_INF
+    models an overflowed kernel accumulator.  FAULT_NONE is the identity,
+    so fault-free engines trace the same program."""
+    poison = jnp.where(code == FAULT_NAN, jnp.nan, jnp.inf)
+    return jnp.where(code == FAULT_NONE, logits,
+                     jnp.full_like(logits, poison))
 
 
 @dataclasses.dataclass
@@ -184,6 +270,10 @@ class IterStats:
     accepted: float        # mean accepted tokens per active slot (spec dec)
     wall_s: float
     transfers: int = 0     # device->host sync round-trips this iteration
+    # failure-model counters (see the module docstring):
+    preemptions: int = 0   # in-flight requests preempted this iteration
+    deferral_age: int = 0  # consecutive iterations the queue head deferred
+    degraded: int = 0      # 1 if the finite-logits guard degraded this step
     # paged KV layout only (zeros under the dense layout):
     kv_pages_used: int = 0       # pages holding live KV right now
     kv_pages_free: int = 0       # pages on the free list
@@ -224,6 +314,11 @@ class PapiEngine:
         page_size: int = 16,
         num_pages: int | None = None,
         max_blocks: int | None = None,
+        faults: FaultInjector | None = None,
+        preempt_after: int | None = 8,
+        preempt_watermark: float | None = None,
+        stall_limit: int | None = 256,
+        debug_invariants: bool = False,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
         assert kv_layout in ("dense", "paged"), kv_layout
@@ -296,6 +391,29 @@ class PapiEngine:
         self.stats: list[IterStats] = []
         self.iteration = 0
         self.host_transfers = 0
+        # --- failure model (see the module docstring) ---
+        self.faults = faults
+        self.preempt_after = preempt_after
+        self.preempt_watermark = preempt_watermark
+        self.stall_limit = stall_limit
+        self.debug_invariants = debug_invariants
+        # admission order per slot: the victim policy preempts the highest
+        # sequence number (youngest), never the lowest (oldest)
+        self._admit_seq = 0
+        self.slot_seq: list[int] = [0] * max_slots
+        self._defer_head: int | None = None   # req_id of the deferring head
+        self._defer_age = 0                   # consecutive deferred steps
+        self._deferred_head: int | None = None  # set by _admit on deferral
+        self._degraded_this_step = False
+        self._stalled = 0                     # consecutive no-progress steps
+        self.preemptions = 0                  # engine-lifetime total
+        self.degraded_steps = 0               # engine-lifetime total
+        self.preempted_ids: set[int] = set()
+        # wall-clock submit time (deadline base) and admission-delay
+        # bookkeeping, keyed by req_id; first submission/admission wins
+        self._submit_t: dict[int, float] = {}
+        self.submit_iteration: dict[int, int] = {}
+        self.admit_iteration: dict[int, int] = {}
         # chunked prefill masks its KV writes per slot; SSM state has no
         # sequence dim to mask, so stateful families keep single-window
         # prefill and reject longer prompts honestly
@@ -330,15 +448,44 @@ class PapiEngine:
     # ------------------------------------------------------------------ API
     def submit(self, req: ServeRequest) -> None:
         self.queue.append(req)
+        self._submit_t.setdefault(req.req_id, self._now())
+        self.submit_iteration.setdefault(req.req_id, self.iteration)
 
     @property
     def active_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
-    def run(self, max_iterations: int = 10_000) -> list[ServeResult]:
+    def run(self, max_iterations: int = 10_000, *,
+            abort_in_flight: bool = True) -> list[ServeResult]:
         while (self.queue or self.active_slots) and self.iteration < max_iterations:
             self.step()
+        if abort_in_flight and self.active_slots and (
+                self.iteration >= max_iterations):
+            # iteration exhaustion must not drop in-flight requests on the
+            # floor: return them honestly with their tokens-so-far and
+            # drain their pages/reservations.  (Queued requests stay
+            # queued — a later run() call picks them up.)  Tests that step
+            # an engine incrementally pass ``abort_in_flight=False`` to
+            # keep the in-flight state across run() calls.
+            for s in list(self.active_slots):
+                self._finish_slot(s, "aborted")
         return self.results
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a queued or in-flight request: it finishes with
+        ``finished_reason="cancelled"`` and its tokens-so-far, and its
+        pages/reservations drain.  Returns False when no pending request
+        carries `req_id` (already finished, or never submitted)."""
+        for i, req in enumerate(self.queue):
+            if req.req_id == req_id:
+                self.queue.pop(i)
+                self._emit(req, [], "cancelled")
+                return True
+        for s in self.active_slots:
+            if self.slot_req[s].req_id == req_id:
+                self._finish_slot(s, "cancelled")
+                return True
+        return False
 
     # ------------------------------------------------------------- internals
     def _cache_shardings(self, cfg: ModelConfig):
@@ -411,14 +558,17 @@ class PapiEngine:
 
     def _get_plain_fused(self):
         """Fused plain decode: decode_step + greedy in one device program, so
-        the only host transfer is the [slots] token vector."""
+        the only host transfer is the [slots] token vector (plus the
+        device-side finite-logits flag riding in the same fetch)."""
         key = self._jit_key("plain_fused", 1)
         if key not in self._decode_jit:
             cfg = self.cfg
 
-            def plain_step(params, cache, last):
+            def plain_step(params, cache, last, fault):
                 logits, cache = decode_step(cfg, params, cache, last[:, None])
-                return greedy(logits[:, -1]), cache
+                logits = _inject_fault(logits, fault)
+                bad = ~jnp.all(jnp.isfinite(logits))
+                return greedy(logits[:, -1]), bad, cache
 
             self._decode_jit[key] = jax.jit(plain_step)
         return self._decode_jit[key]
@@ -433,7 +583,8 @@ class PapiEngine:
             cfg, dcfg = self.cfg, self.draft_cfg
             k, eos = self.spec_len, self.eos_token
 
-            def spec_step(params, draft_params, cache, draft_cache, last):
+            def spec_step(params, draft_params, cache, draft_cache, last,
+                          fault):
                 # 1) draft proposes autoregressively.  It runs k steps — the
                 # extra step writes KV for the window's final token, keeping
                 # the two caches in lockstep when the full window is accepted.
@@ -451,6 +602,8 @@ class PapiEngine:
 
                 # 2) target verifies the window in ONE decode step (TLP = k)
                 logits, cache = decode_step(cfg, params, cache, window)
+                logits = _inject_fault(logits, fault)
+                bad = ~jnp.all(jnp.isfinite(logits))
                 target = greedy(logits)                           # [slots, k]
 
                 # 3) accept longest matching prefix, rewind target cache to
@@ -463,10 +616,52 @@ class PapiEngine:
                                                  cache["pos"])
                 in_window = jnp.arange(k)[None, :] < accepted[:, None]
                 finished_eos = jnp.any((out == eos) & in_window, axis=1)
-                return out, accepted, finished_eos, cache, draft_cache
+                return out, accepted, finished_eos, bad, cache, draft_cache
 
             self._decode_jit[key] = jax.jit(spec_step)
         return self._decode_jit[key]
+
+    def _get_oracle(self, which: str):
+        """Degraded-mode decode step: the tested XLA-attention / plain-FC
+        oracle path, compiled once per model and NEVER fault-injected.  Its
+        jit key is independent of the scheduler's fc assignment — it must
+        always be the same executable the correctness suite validates."""
+        key = ("oracle", which)
+        if key not in self._decode_jit:
+            cfg = self.draft_cfg if which == "draft" else self.cfg
+            self._decode_jit[key] = jax.jit(partial(decode_step, cfg))
+        return self._decode_jit[key]
+
+    def _fault_code(self):
+        """Per-iteration logits-fault code, passed as a TRACED int32 scalar
+        so flipping it never retraces the fused programs.  Under
+        ``fused=False`` the engine already runs the oracle path, so logits
+        faults only apply to the fused programs."""
+        if self.faults is None or not self.fused:
+            return jnp.asarray(FAULT_NONE, jnp.int32)
+        return jnp.asarray(self.faults.logits_fault(self.iteration),
+                           jnp.int32)
+
+    def _degraded_step(self):
+        """Re-run a poisoned iteration on the oracle path: XLA attention,
+        plain-PU linear, speculation clamped to a single plain decode step.
+        Runs inside `_decode_all`'s ambient scopes — `attn_impl` and
+        `fc_variant` are save/restore context managers, so nesting the
+        oracle contexts here is safe.  When speculating, the draft cache
+        advances one plain step too, keeping both KVs in lockstep for the
+        next (healthy) speculative iteration."""
+        self.degraded_steps += 1
+        self._degraded_this_step = True
+        last = jnp.asarray(self.slot_last)
+        with attn_impl("xla"), fc_variant("pu"):
+            logits, self.cache = self._get_oracle("main")(
+                self.params, self.cache, last[:, None])
+            if self.spec_len > 1 and self.draft_cfg is not None:
+                _, self.draft_cache = self._get_oracle("draft")(
+                    self.draft_params, self.draft_cache, last[:, None])
+            nxt_h = self._fetch(greedy(logits[:, -1]))
+        return (np.asarray(nxt_h)[:, None].astype(np.int32),
+                np.ones(self.max_slots), None)
 
     def _get_prefill(self, which: str):
         cfg = self.draft_cfg if which == "draft" else self.cfg
@@ -502,6 +697,14 @@ class PapiEngine:
         or a 1-token budget) frees its slot for the NEXT wave, so the queue
         keeps draining within this step exactly like the seed's slot-reuse
         loop did."""
+        self._deferred_head = None
+        if (self.queue and self.faults is not None
+                and self.faults.admission_blocked(self.iteration)):
+            # injected allocator admission failure: the whole wave defers
+            # (queue order kept) and the deferral-age / preemption /
+            # watchdog machinery sees it like genuine pool pressure
+            self._deferred_head = self.queue[0].req_id
+            return 0
         admitted = 0
         while True:
             wave_admitted, instant_finish = self._admit_wave()
@@ -510,8 +713,162 @@ class PapiEngine:
                 return admitted
 
     def _reject(self, req: ServeRequest) -> None:
-        self.results.append(ServeResult(
-            req.req_id, [], len(req.prompt), self.iteration, "rejected"))
+        self._emit(req, [], "rejected")
+
+    # ------------------------------------------------- failure-model helpers
+    def _now(self) -> float:
+        """Deadline clock (monotonic); tests monkeypatch this to expire
+        deadlines without sleeping."""
+        return time.monotonic()
+
+    def _emit(self, req, tokens: Sequence[int], reason: str) -> None:
+        """Append the caller-visible result for `req`.  A preempted request
+        re-entered admission as a `_ResumedRequest` whose prompt carries its
+        own earlier output — reassemble the original stream here."""
+        if isinstance(req, _ResumedRequest):
+            self.results.append(ServeResult(
+                req.req_id, req.done + list(tokens), req.orig_prompt_len,
+                self.iteration, reason))
+        else:
+            self.results.append(ServeResult(
+                req.req_id, list(tokens), len(req.prompt), self.iteration,
+                reason))
+
+    def _finish_slot(self, s: int, reason: str) -> None:
+        """Finish live slot `s` outside the normal eos/length path (timeout,
+        cancel, abort): emit tokens-so-far and drain the slot's pages."""
+        self._emit(self.slot_req[s], self.slot_tokens[s], reason)
+        self.slot_req[s] = None
+        self.slot_tokens[s] = []
+        self.slot_last[s] = 0
+        if self.kv is not None:
+            self.kv.release(s)
+
+    def _deadline_expired(self, req) -> bool:
+        dl = getattr(req, "deadline_s", None)
+        if dl is None:
+            return False
+        t0 = self._submit_t.get(req.req_id)
+        return t0 is not None and self._now() - t0 > dl
+
+    def _expire_deadlines(self) -> None:
+        still_queued = [r for r in self.queue if not self._deadline_expired(r)]
+        if len(still_queued) != len(self.queue):
+            for req in self.queue:
+                if self._deadline_expired(req):
+                    self._emit(req, [], "timeout")
+            self.queue = still_queued
+        for s in self.active_slots:
+            if self._deadline_expired(self.slot_req[s]):
+                self._finish_slot(s, "timeout")
+
+    def _should_preempt(self) -> bool:
+        """Pool-pressure trigger: the head has deferred `preempt_after`
+        consecutive iterations, or the pool occupancy crossed
+        `preempt_watermark` (fraction of usable pages mapped) while a
+        deferral is pending.  Dense admission never defers, so preemption
+        is a paged-layout mechanism."""
+        if self.kv is None or self._defer_age < 1:
+            return False
+        if self.preempt_after is not None and (
+                self._defer_age >= self.preempt_after):
+            return True
+        if self.preempt_watermark is not None:
+            alloc = self.kv.alloc
+            return alloc.mapped_count >= self.preempt_watermark * alloc.num_pages
+        return False
+
+    def _preempt_one(self) -> bool:
+        """Preempt the YOUNGEST in-flight request (highest admission
+        sequence number): release its pages and requeue it at the back as
+        `prompt + tokens-so-far`, which chunked admission recomputes
+        bit-identically.  The oldest in-flight request is never preempted
+        — it always runs to completion, so the pool always drains toward
+        the deferring head and forward progress is guaranteed (with a
+        single in-flight request there is nothing younger, so the head
+        simply waits for it to finish)."""
+        live = sorted((self.slot_seq[s], s) for s in self.active_slots)
+        if len(live) < 2:
+            return False
+        victim = live[-1][1]
+        req = self.slot_req[victim]
+        emitted = self.slot_tokens[victim]
+        if isinstance(req, _ResumedRequest):
+            done = req.done + list(emitted)
+            base_prompt = req.prompt[:req.orig_prompt_len]
+            plen = req.orig_prompt_len
+        else:
+            done = list(emitted)
+            base_prompt = list(req.prompt)
+            plen = len(req.prompt)
+        self.queue.append(_ResumedRequest(
+            req_id=req.req_id,
+            prompt=base_prompt + done,
+            max_new_tokens=int(self.slot_budget[victim]) - len(emitted),
+            deadline_s=getattr(req, "deadline_s", None),
+            done=done,
+            orig_prompt_len=plen,
+        ))
+        self.slot_req[victim] = None
+        self.slot_tokens[victim] = []
+        self.slot_last[victim] = 0
+        if self.kv is not None:
+            self.kv.release(victim)
+        self.preemptions += 1
+        self.preempted_ids.add(req.req_id)
+        return True
+
+    def _snapshot(self) -> dict:
+        """Diagnostic state bundle carried by the structured errors."""
+        snap = {
+            "iteration": self.iteration,
+            "queue": [r.req_id for r in self.queue],
+            "deferred_head": self._defer_head,
+            "deferral_age": self._defer_age,
+            "active": {s: self.slot_req[s].req_id
+                       for s in self.active_slots},
+            "slot_budget": {s: int(self.slot_budget[s])
+                            for s in self.active_slots},
+            "preemptions": self.preemptions,
+            "degraded_steps": self.degraded_steps,
+            "stalled_iterations": self._stalled,
+        }
+        if self.kv is not None:
+            snap["pool"] = self.kv.alloc.snapshot()
+        return snap
+
+    def _watchdog(self, progress: bool) -> None:
+        if progress:
+            self._stalled = 0
+            return
+        self._stalled += 1
+        if (self.stall_limit is not None
+                and (self.queue or self.active_slots)
+                and self._stalled >= self.stall_limit):
+            snap = self._snapshot()
+            raise EngineStallError(
+                f"engine made no progress for {self._stalled} consecutive "
+                f"iterations at iteration {self.iteration} "
+                f"(queue={snap['queue']}, deferral_age={self._defer_age}, "
+                f"pool={snap.get('pool')})", snap)
+
+    def _check_invariants(self) -> None:
+        if not (self.debug_invariants and self.kv is not None):
+            return
+        try:
+            self.kv.alloc.check()
+        except AssertionError as err:
+            raise AllocatorInvariantError(
+                f"page-pool invariant violated at iteration "
+                f"{self.iteration}: {err}", self._snapshot()) from err
+
+    def _mark_admitted(self, slot: int, req) -> None:
+        """Admission-order bookkeeping: the preemption victim policy sorts
+        on `slot_seq`, and the first-admission iteration feeds the
+        admission-delay numbers the --pressure benchmark gates."""
+        self._admit_seq += 1
+        self.slot_seq[slot] = self._admit_seq
+        self.admit_iteration.setdefault(req.req_id, self.iteration)
 
     def _admit_wave(self) -> tuple[int, bool]:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
@@ -541,14 +898,18 @@ class PapiEngine:
                     continue
                 want = max(1, min(req.max_new_tokens, cap))
                 if not self.kv.can_admit(p + want + window):
-                    # pool busy — the reservation math guarantees this
-                    # clears once running requests finish, so defer (the
-                    # queue keeps order) instead of rejecting
+                    # pool busy — defer (the queue keeps order) instead of
+                    # rejecting.  The deferral is noted so step() can age
+                    # it and trigger pool-pressure preemption; absent that,
+                    # the reservation math still guarantees this clears
+                    # once running requests finish.
+                    self._deferred_head = req.req_id
                     break
                 self.queue.pop(0)
                 slot = free.pop(0)
                 self.kv.admit(slot, p + want + window, p)
                 self.slot_budget[slot] = want
+                self._mark_admitted(slot, req)
                 batch_rows.append((slot, req))
                 continue
             self.queue.pop(0)
@@ -563,6 +924,7 @@ class PapiEngine:
                 continue
             slot = free.pop(0)
             self.slot_budget[slot] = max(1, min(req.max_new_tokens, budget))
+            self._mark_admitted(slot, req)
             batch_rows.append((slot, req))
         if not batch_rows:
             return 0, False
@@ -638,9 +1000,7 @@ class PapiEngine:
             # prefill already produced the first output token
             if tok == self.eos_token or self.slot_budget[slot] <= 1:
                 reason = "eos" if tok == self.eos_token else "length"
-                self.results.append(ServeResult(
-                    req.req_id, [tok], len(req.prompt), self.iteration,
-                    reason))
+                self._emit(req, [tok], reason)
                 self.slot_last[slot] = 0   # slot stays available
                 if self.kv is not None:
                     self.kv.release(slot)
@@ -661,9 +1021,15 @@ class PapiEngine:
             if tlp <= 1 or self.draft_cfg is None:
                 last = jnp.asarray(self.slot_last)
                 if self.fused:
-                    nxt, self.cache = self._get_plain_fused()(
-                        self.params, self.cache, last)
-                    nxt_h = self._fetch(nxt)
+                    nxt, bad, cache2 = self._get_plain_fused()(
+                        self.params, self.cache, last, self._fault_code())
+                    nxt_h, bad_h = self._fetch(nxt, bad)
+                    if bad_h:
+                        # non-finite logits: drop the poisoned step (the
+                        # returned cache is never assigned) and re-run on
+                        # the oracle path
+                        return self._degraded_step()
+                    self.cache = cache2
                 else:
                     logits, self.cache = self._get_decode("plain")(
                         self.params, self.cache, last[:, None])
@@ -677,11 +1043,17 @@ class PapiEngine:
     def _speculative_iteration_fused(self):
         """Device-resident draft/verify/accept: one transfer per iteration."""
         fn = self._get_spec_fused()
-        out, accepted, fin, self.cache, self.draft_cache = fn(
+        out, accepted, fin, bad, cache, draft_cache = fn(
             self.params, self.draft_params, self.cache, self.draft_cache,
-            jnp.asarray(self.slot_last),
+            jnp.asarray(self.slot_last), self._fault_code(),
         )
-        out_h, acc_h, fin_h = self._fetch(out, accepted, fin)
+        out_h, acc_h, fin_h, bad_h = self._fetch(out, accepted, fin, bad)
+        if bad_h:
+            # non-finite verify logits: neither cache is assigned (both
+            # still hold the pre-step state), and the iteration degrades to
+            # a single oracle decode step (spec window clamped to 1)
+            return self._degraded_step()
+        self.cache, self.draft_cache = cache, draft_cache
         return (np.asarray(out_h), np.asarray(acc_h).astype(np.float64),
                 np.asarray(fin_h))
 
@@ -731,7 +1103,33 @@ class PapiEngine:
     def step(self) -> None:
         t0 = time.perf_counter()
         transfers0 = self.host_transfers
+        results0 = len(self.results)
+        preempted0 = self.preemptions
+        self._degraded_this_step = False
+        if self.faults is not None:
+            delay = self.faults.step_delay(self.iteration)
+            if delay > 0:
+                time.sleep(delay)
+        self._expire_deadlines()
         admitted = self._admit()
+        # deferral-age accounting: consecutive iterations the SAME queue
+        # head has been deferred by the pool (slot-limited waits don't
+        # count — only can_admit failures / injected admission faults set
+        # `_deferred_head`)
+        if self._deferred_head is None:
+            self._defer_age = 0
+            self._defer_head = None
+        elif self._deferred_head != self._defer_head:
+            self._defer_head = self._deferred_head
+            self._defer_age = 1
+        else:
+            self._defer_age += 1
+        if self._defer_age and self._should_preempt() and self._preempt_one():
+            # pages freed — retry admission immediately so the head's
+            # admission delay is bounded by K, not K + another deferral
+            admitted += self._admit()
+            if self._deferred_head is None:
+                self._defer_age = 0
         active = self.active_slots
         if not active:
             # Still a step: count it, or `run(max_iterations=)` is a dead
@@ -739,6 +1137,9 @@ class PapiEngine:
             # spin this loop forever (regression-tested).
             self.scheduler.observe_counts(0, admitted)
             self.iteration += 1
+            self._watchdog(admitted > 0 or len(self.results) > results0
+                           or self.preemptions > preempted0)
+            self._check_invariants()
             return
 
         speculating = self.spec_len > 1 and self.draft_cfg is not None
@@ -772,10 +1173,7 @@ class PapiEngine:
                     len(self.slot_tokens[s]) >= self.slot_budget[s]
                 ):
                     reason = "eos" if tok == self.eos_token else "length"
-                    self.results.append(ServeResult(
-                        req.req_id, self.slot_tokens[s], len(req.prompt),
-                        self.iteration, reason,
-                    ))
+                    self._emit(req, self.slot_tokens[s], reason)
                     self.slot_req[s] = None
                     finished_flags[s] = True
                     break
@@ -812,6 +1210,10 @@ class PapiEngine:
         # flags go to the scheduler as an array — it sums them itself.
         self.scheduler.observe_counts(finished_flags, admitted)
         self.iteration += 1
+        self._watchdog(admitted > 0 or len(iter_tokens) > 0
+                       or len(self.results) > results0
+                       or self.preemptions > preempted0)
+        self._check_invariants()
         kv_used = kv_free = kv_peak = 0
         kv_frag = 0.0
         if self.kv is not None:
@@ -822,6 +1224,9 @@ class PapiEngine:
             kv_used, kv_free = ps.mapped, ps.free
             kv_peak, kv_frag = ps.watermark, ps.fragmentation
         self.stats.append(IterStats(
+            preemptions=self.preemptions - preempted0,
+            deferral_age=self._defer_age,
+            degraded=1 if self._degraded_this_step else 0,
             iteration=self.iteration,
             rlp=self.scheduler.rlp,
             tlp=self.scheduler.tlp,

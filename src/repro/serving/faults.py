@@ -1,0 +1,141 @@
+"""Deterministic fault injection for the serving engine.
+
+The engine's failure model (see `docs/ARCHITECTURE.md`, "Failure model &
+graceful degradation") is only trustworthy if every failure path can be
+*forced* in a test, reproducibly.  `FaultInjector` is that forcing
+function: a seeded, per-iteration schedule of faults the engine consults
+at well-defined points of `PapiEngine.step()`.
+
+Fault taxonomy (what each kind models, and which guard catches it):
+
+  ``admit``     Allocator admission failure — the pool reports "busy" even
+                when pages are free (a stand-in for external memory
+                pressure or an allocator bug).  Caught by the deferral
+                path: the head of the queue defers, `IterStats`
+                deferral age grows, and pool-pressure preemption /
+                the no-progress watchdog bound the wait.
+  ``nan``       NaN logits out of the decode step (numerically-poisoned
+                weights, a bad rescale).  Caught by the jitted
+                finite-logits guard: the step is discarded and re-run on
+                the XLA oracle path with the speculation window clamped
+                to 1 (``IterStats.degraded``).
+  ``kernel``    Kernel-output corruption modeled as an overflowed
+                accumulator: logits forced to +inf.  Caught by the same
+                finite-logits guard (isfinite rejects inf and NaN alike).
+  ``latency``   Artificial per-step host latency (a slow collective, a
+                straggler shard).  Nothing to "catch" — it exists so the
+                deadline machinery (`ServeRequest.deadline_s`) can be
+                exercised against a deterministically slow engine.
+
+Determinism: every decision is a pure function of ``(seed, iteration)``
+(`numpy.random.default_rng([seed, step])`), so a run replays exactly
+regardless of how many times a step consults the injector, and two
+engines with the same seed see the same fault schedule.
+
+The logits faults are applied *inside* the jitted fused step: the engine
+passes the per-iteration fault code as a traced int32 scalar
+(`FAULT_NONE/FAULT_NAN/FAULT_INF`), so injection costs no retrace and the
+oracle re-run (which takes the unfused path, no fault argument) is clean
+by construction.  Under ``fused=False`` the engine is already running the
+oracle path end to end, so logits faults are not applied there.
+
+CLI: `launch.serve --fault kind[:prob]` builds an injector via
+`parse_fault_specs` (repeatable, e.g. ``--fault nan:0.2 --fault admit:0.5``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# fault codes the jitted steps consume (traced int32 scalar)
+FAULT_NONE = 0
+FAULT_NAN = 1
+FAULT_INF = 2
+
+KINDS = ("admit", "nan", "kernel", "latency")
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Seeded per-iteration fault schedule.
+
+    Each ``*_p`` is the per-iteration probability of that fault firing;
+    ``window`` optionally restricts injection to iterations
+    ``start <= it < stop`` (None = unbounded).  ``counts`` records what
+    actually fired, keyed by kind.
+    """
+
+    seed: int = 0
+    admit_p: float = 0.0
+    nan_p: float = 0.0
+    kernel_p: float = 0.0
+    latency_p: float = 0.0
+    latency_s: float = 0.002
+    start: int = 0
+    stop: int | None = None
+
+    def __post_init__(self) -> None:
+        self.counts: dict[str, int] = {k: 0 for k in KINDS}
+
+    # ------------------------------------------------------------- schedule
+    def _draws(self, step: int) -> np.ndarray:
+        """Four uniforms, a pure function of (seed, step): one per kind, so
+        the kinds fire independently and a repeated consult replays."""
+        return np.random.default_rng([self.seed, int(step)]).random(4)
+
+    def _active(self, step: int) -> bool:
+        return step >= self.start and (self.stop is None or step < self.stop)
+
+    # ------------------------------------------------------ engine consults
+    def admission_blocked(self, step: int) -> bool:
+        """Force this iteration's admission to report the pool busy."""
+        hit = self._active(step) and self._draws(step)[0] < self.admit_p
+        if hit:
+            self.counts["admit"] += 1
+        return hit
+
+    def logits_fault(self, step: int) -> int:
+        """FAULT_NAN / FAULT_INF / FAULT_NONE for this iteration's decode.
+        NaN wins when both fire — one corrupted value per step is enough."""
+        if not self._active(step):
+            return FAULT_NONE
+        draws = self._draws(step)
+        if draws[1] < self.nan_p:
+            self.counts["nan"] += 1
+            return FAULT_NAN
+        if draws[2] < self.kernel_p:
+            self.counts["kernel"] += 1
+            return FAULT_INF
+        return FAULT_NONE
+
+    def step_delay(self, step: int) -> float:
+        """Artificial host latency (seconds) to sleep before the decode."""
+        hit = self._active(step) and self._draws(step)[3] < self.latency_p
+        if hit:
+            self.counts["latency"] += 1
+            return self.latency_s
+        return 0.0
+
+
+def parse_fault_specs(specs: list[str], *, seed: int = 0,
+                      latency_s: float = 0.002) -> FaultInjector | None:
+    """Build an injector from CLI specs like ``["nan:0.2", "admit"]``.
+
+    Each spec is ``kind[:prob]`` (prob defaults to 1.0).  Returns None for
+    an empty list so callers can pass the result straight to
+    ``PapiEngine(faults=...)``.
+    """
+    if not specs:
+        return None
+    probs = {k: 0.0 for k in KINDS}
+    for spec in specs:
+        kind, _, prob = spec.partition(":")
+        kind = kind.strip()
+        if kind not in KINDS:
+            raise ValueError(
+                f"unknown fault kind {kind!r} (choose from {KINDS})")
+        probs[kind] = float(prob) if prob else 1.0
+    return FaultInjector(seed=seed, admit_p=probs["admit"],
+                         nan_p=probs["nan"], kernel_p=probs["kernel"],
+                         latency_p=probs["latency"], latency_s=latency_s)

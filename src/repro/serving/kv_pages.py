@@ -219,6 +219,21 @@ class PageAllocator:
             fragmentation=self.fragmentation(used_tokens),
         )
 
+    def snapshot(self) -> dict:
+        """Plain-dict state dump for diagnostics: the structured engine
+        errors (`EngineStallError`, `AllocatorInvariantError`) attach this
+        so a post-mortem can see exactly who held what."""
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "free": self.free_count,
+            "mapped": {owner: list(row)
+                       for owner, row in self._mapped.items()},
+            "reserved": dict(self._reserved),
+            "available": self.available,
+            "watermark": self.watermark,
+        }
+
     def check(self) -> None:
         """Assert the pool invariants (used by the property tests)."""
         mapped = [p for row in self._mapped.values() for p in row]
@@ -323,6 +338,13 @@ class PagedKVManager:
         return len(freed)
 
     def release(self, slot: int) -> int:
+        """Drop everything `slot` holds — mapped pages AND the unmapped
+        reservation — and scrub its block-table row back to the garbage
+        page.  This is the preemption/cancel/timeout drain as much as the
+        normal finish: a preempted request re-enters admission later as a
+        fresh `admit()` with a fresh reservation, and the scrubbed row
+        guarantees its old pages can be re-issued to any other slot without
+        aliasing."""
         freed = self.alloc.finish(slot)
         self.tables.clear_row(slot)
         return len(freed)

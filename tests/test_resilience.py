@@ -1,0 +1,367 @@
+"""Failure model & graceful degradation (docs/ARCHITECTURE.md):
+
+  * pool-pressure preemption evicts the YOUNGEST in-flight request, never
+    the oldest (forward progress), and the preempted request's final
+    stream is bit-identical to an unconstrained serve — the requeue is
+    ``prompt + tokens-so-far`` recomputed through chunked prefill;
+  * deferral-age accounting: a head the pool cannot admit surfaces a
+    growing `IterStats.deferral_age` and triggers preemption within
+    `preempt_after` iterations instead of silently livelocking;
+  * deadlines (`ServeRequest.deadline_s`), `cancel()`, and
+    `run()`-exhaustion abort all finish requests honestly with their
+    tokens-so-far and drain the page pool;
+  * the seeded `FaultInjector` forces admission failure / NaN / Inf
+    logits deterministically; the finite-logits guard degrades poisoned
+    steps to the XLA oracle path WITHOUT changing the token stream;
+  * the no-progress watchdog raises `EngineStallError` (with a
+    pool/queue/slot snapshot) instead of spinning to max_iterations, and
+    `debug_invariants=True` turns allocator violations into
+    `AllocatorInvariantError`.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (AllocatorInvariantError, EngineStallError,
+                           FaultInjector, PapiEngine, ServeRequest,
+                           parse_fault_specs)
+from repro.serving.faults import FAULT_INF, FAULT_NAN, FAULT_NONE
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def draft_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(9))
+
+
+NO_EOS = get_config("qwen2-0.5b").reduced().vocab_size - 1
+
+# three requests whose page budgets oversubscribe the _tight() pool: two
+# fit, the third defers until preemption makes room
+PRESSURE_REQS = [([3 + i, 5, 7], 20) for i in range(3)]
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
+                    alpha=6.0, eos_token=NO_EOS, debug_invariants=True)
+    defaults.update(kw)
+    return PapiEngine(cfg, params, **defaults)
+
+
+def _tight(cfg, params, **kw):
+    """Paged engine whose pool holds two PRESSURE_REQS but not three."""
+    defaults = dict(max_slots=4, cache_capacity=16, kv_layout="paged",
+                    page_size=4)
+    defaults.update(kw)
+    return _engine(cfg, params, **defaults)
+
+
+def _serve(eng, reqs):
+    for i, (prompt, n) in enumerate(reqs):
+        eng.submit(ServeRequest(i, list(prompt), max_new_tokens=n))
+    return {r.req_id: r for r in eng.run(max_iterations=500)}
+
+
+def _assert_drained(eng):
+    eng.kv.alloc.check()
+    assert eng.kv.alloc.mapped_count == 0
+    assert eng.kv.alloc.reserved_unmapped == 0
+    assert eng.kv.alloc.free_count == eng.kv.alloc.num_pages
+
+
+# ---------------------------------------------------------------- preemption
+
+@pytest.mark.parametrize("trigger", ["after", "watermark"])
+def test_preemption_bit_identical_greedy(small_model, trigger):
+    """An oversubscribed pool preempts, and every stream — preempted or
+    not — still equals the unconstrained dense serve."""
+    cfg, params = small_model
+    want = _serve(_engine(cfg, params), PRESSURE_REQS)
+
+    kw = (dict(preempt_after=3) if trigger == "after"
+          else dict(preempt_after=None, preempt_watermark=0.5))
+    eng = _tight(cfg, params, **kw)
+    got = _serve(eng, PRESSURE_REQS)
+
+    assert eng.preemptions >= 1
+    assert sum(s.preemptions for s in eng.stats) == eng.preemptions
+    for i in range(len(PRESSURE_REQS)):
+        assert got[i].tokens == want[i].tokens, i
+        assert got[i].finished_reason == "length"
+        assert got[i].prompt_len == len(PRESSURE_REQS[i][0])
+    _assert_drained(eng)
+
+
+def test_preemption_bit_identical_speculative(small_model, draft_model):
+    """Speculative + paged under preemption: greedy speculation is
+    lossless, so even the preempted request's stream (whose window
+    alignment the preemption reset) matches the dense plain-greedy serve."""
+    cfg, params = small_model
+    want = _serve(_engine(cfg, params), PRESSURE_REQS)
+
+    eng = _tight(cfg, params, spec_len=2, draft=draft_model,
+                 preempt_after=3)
+    got = _serve(eng, PRESSURE_REQS)
+
+    assert eng.preemptions >= 1
+    for i in range(len(PRESSURE_REQS)):
+        assert got[i].tokens == want[i].tokens, i
+    _assert_drained(eng)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_preemption_bit_identical_paged_mesh(small_model, draft_model):
+    """Preemption composes with the mesh: 8-way tensor-parallel paged +
+    speculative serving under pool pressure still emits the 1-device
+    dense streams."""
+    from repro.launch.mesh import make_serving_mesh
+    cfg, params = small_model
+    want = _serve(_engine(cfg, params), PRESSURE_REQS)
+
+    eng = _tight(cfg, params, spec_len=2, draft=draft_model,
+                 preempt_after=3, mesh=make_serving_mesh(1, 8))
+    got = _serve(eng, PRESSURE_REQS)
+
+    assert eng.preemptions >= 1
+    for i in range(len(PRESSURE_REQS)):
+        assert got[i].tokens == want[i].tokens, i
+    _assert_drained(eng)
+
+
+def test_oldest_never_preempted_and_deferral_age_grows(small_model):
+    """Satellite: a head the held pool cannot admit surfaces a GROWING
+    IterStats.deferral_age and preempts within `preempt_after` iterations
+    — and the victim is the youngest, never the oldest."""
+    cfg, params = small_model
+    K = 4
+    eng = _tight(cfg, params, preempt_after=K)
+    results = _serve(eng, PRESSURE_REQS)
+
+    ages = [s.deferral_age for s in eng.stats]
+    assert max(ages) == K            # grew 1..K, then the preemption fired
+    first_defer = next(i for i, a in enumerate(ages) if a == 1)
+    assert ages[first_defer:first_defer + K] == list(range(1, K + 1))
+    assert eng.stats[first_defer + K - 1].preemptions == 1
+
+    assert 1 in eng.preempted_ids    # youngest of the two in-flight
+    assert 0 not in eng.preempted_ids  # oldest always runs to completion
+    assert all(r.finished_reason == "length" for r in results.values())
+    _assert_drained(eng)
+
+
+def test_no_preemption_with_single_active(small_model):
+    """Forward progress: with one in-flight request there is nothing
+    younger to evict — the head waits for it to finish instead of the
+    engine thrashing the only request making progress."""
+    cfg, params = small_model
+    # pool of 8 usable pages: req0's budget (3+20+1 -> 6 pages) fits, but
+    # not two of them — req1 defers until req0 finishes
+    eng = _tight(cfg, params, cache_capacity=8, preempt_after=2)
+    results = _serve(eng, [([3, 5, 7], 20), ([4, 5, 7], 20)])
+    assert eng.preemptions == 0
+    assert all(len(r.tokens) == 20 and r.finished_reason == "length"
+               for r in results.values())
+    _assert_drained(eng)
+
+
+# ------------------------------------------------------ deadlines and cancel
+
+def test_deadline_timeout_in_flight_and_queued(small_model):
+    cfg, params = small_model
+    eng = _tight(cfg, params, max_slots=1)
+    clock = {"now": 0.0}
+    eng._now = lambda: clock["now"]
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=30,
+                            deadline_s=5.0))
+    eng.submit(ServeRequest(1, [4, 5, 7], max_new_tokens=30,
+                            deadline_s=5.0))          # queued (1 slot)
+    eng.run(max_iterations=3, abort_in_flight=False)
+    assert eng.active_slots == [0] and len(eng.queue) == 1
+
+    clock["now"] = 10.0                               # both expire
+    res = {r.req_id: r for r in eng.run(max_iterations=10)}
+    assert res[0].finished_reason == "timeout"
+    assert len(res[0].tokens) >= 1                    # tokens-so-far kept
+    assert res[1].finished_reason == "timeout"
+    assert res[1].tokens == []                        # never admitted
+    _assert_drained(eng)
+
+
+def test_cancel_queued_and_in_flight(small_model):
+    cfg, params = small_model
+    eng = _tight(cfg, params, max_slots=1)
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=30))
+    eng.submit(ServeRequest(1, [4, 5, 7], max_new_tokens=30))
+    eng.run(max_iterations=3, abort_in_flight=False)
+
+    assert eng.cancel(1) is True                      # queued
+    assert eng.cancel(0) is True                      # in-flight
+    assert eng.cancel(99) is False                    # unknown
+    assert eng.cancel(1) is False                     # already finished
+    res = {r.req_id: r for r in eng.results}
+    assert res[1].finished_reason == "cancelled" and res[1].tokens == []
+    assert res[0].finished_reason == "cancelled" and len(res[0].tokens) >= 1
+    _assert_drained(eng)
+
+
+def test_run_exhaustion_aborts_in_flight(small_model):
+    """Satellite: iteration exhaustion returns in-flight requests as
+    finished_reason='aborted' with tokens-so-far and drains the pool."""
+    cfg, params = small_model
+    eng = _tight(cfg, params)
+    for i in range(2):
+        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=20))
+    res = {r.req_id: r for r in eng.run(max_iterations=3)}
+    assert sorted(res) == [0, 1]
+    assert all(r.finished_reason == "aborted" and len(r.tokens) >= 1
+               for r in res.values())
+    _assert_drained(eng)
+
+
+# ------------------------------------------------------------ fault injection
+
+def test_injector_deterministic_and_parses():
+    a = FaultInjector(seed=3, admit_p=0.4, nan_p=0.3, kernel_p=0.3,
+                      latency_p=0.4)
+    b = FaultInjector(seed=3, admit_p=0.4, nan_p=0.3, kernel_p=0.3,
+                      latency_p=0.4)
+    sched = [(a.admission_blocked(i), a.logits_fault(i), a.step_delay(i))
+             for i in range(64)]
+    assert sched == [(b.admission_blocked(i), b.logits_fault(i),
+                      b.step_delay(i)) for i in range(64)]
+    assert any(s[0] for s in sched) and any(s[1] != FAULT_NONE for s in sched)
+    assert sched != [(c.admission_blocked(i), c.logits_fault(i),
+                      c.step_delay(i))
+                     for c in [FaultInjector(seed=4, admit_p=0.4, nan_p=0.3,
+                                             kernel_p=0.3, latency_p=0.4)]
+                     for i in range(64)]
+
+    w = FaultInjector(seed=0, admit_p=1.0, start=2, stop=4)
+    assert [w.admission_blocked(i) for i in range(6)] == [
+        False, False, True, True, False, False]
+
+    inj = parse_fault_specs(["nan:0.2", "admit"], seed=7)
+    assert inj.nan_p == 0.2 and inj.admit_p == 1.0 and inj.seed == 7
+    assert parse_fault_specs([]) is None
+    with pytest.raises(ValueError):
+        parse_fault_specs(["bogus:0.1"])
+
+
+def test_admission_fault_defers_then_recovers(small_model):
+    """Forced allocator admission failure is indistinguishable from pool
+    pressure: the head defers (deferral age in IterStats), and once the
+    fault window closes every request completes normally."""
+    cfg, params = small_model
+    # iteration 0 admits two requests; the head then defers through the
+    # fault window (iterations 1..3) and keeps deferring on genuine pool
+    # pressure until the running requests finish.  Preemption is disabled
+    # so the recovery is pure pool drain.
+    eng = _tight(cfg, params, preempt_after=None,
+                 faults=FaultInjector(seed=0, admit_p=1.0, start=1, stop=4))
+    results = _serve(eng, PRESSURE_REQS)
+    assert eng.faults.counts["admit"] >= 3
+    assert max(s.deferral_age for s in eng.stats) >= 4
+    assert all(len(r.tokens) == 20 and r.finished_reason == "length"
+               for r in results.values())
+    _assert_drained(eng)
+
+
+@pytest.mark.parametrize("kind", ["nan", "kernel"])
+def test_logits_guard_degrades_bit_identical_greedy(small_model, kind):
+    """NaN/Inf logits out of the fused step never reach a token: the
+    guard re-runs the iteration on the oracle path and the stream is
+    bit-identical to the fault-free serve."""
+    cfg, params = small_model
+    reqs = [([3, 5, 7], 12), ([4, 5], 12)]
+    want = _serve(_engine(cfg, params), reqs)
+
+    faults = FaultInjector(seed=5, start=1, stop=8,
+                           **{f"{kind}_p": 1.0})
+    eng = _engine(cfg, params, faults=faults)
+    got = _serve(eng, reqs)
+
+    assert eng.degraded_steps >= 1
+    assert eng.faults.counts[kind] >= 1
+    assert sum(s.degraded for s in eng.stats) == eng.degraded_steps
+    for i in range(len(reqs)):
+        assert got[i].tokens == want[i].tokens, i
+
+
+def test_logits_guard_degrades_bit_identical_speculative(small_model,
+                                                         draft_model):
+    """Degrading a poisoned verify step clamps the window to one oracle
+    decode; the draft cache stays in lockstep and the stream still equals
+    the fault-free (and plain-greedy) serve."""
+    cfg, params = small_model
+    reqs = [([3, 5, 7], 12), ([4, 5], 12)]
+    want = _serve(_engine(cfg, params), reqs)
+
+    eng = _engine(cfg, params, spec_len=2, draft=draft_model,
+                  faults=FaultInjector(seed=5, nan_p=0.5, start=1, stop=8))
+    got = _serve(eng, reqs)
+
+    assert eng.degraded_steps >= 1
+    for i in range(len(reqs)):
+        assert got[i].tokens == want[i].tokens, i
+
+
+def test_latency_fault_trips_deadline(small_model):
+    """Artificial step latency + a tight deadline: the slowed request
+    times out honestly instead of finishing late."""
+    cfg, params = small_model
+    eng = _tight(cfg, params,
+                 faults=FaultInjector(seed=0, latency_p=1.0,
+                                      latency_s=0.05))
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=200,
+                            deadline_s=0.15))
+    res = eng.run(max_iterations=50)
+    assert eng.faults.counts["latency"] >= 1
+    assert res[0].finished_reason == "timeout"
+    _assert_drained(eng)
+
+
+# --------------------------------------------------- watchdog and invariants
+
+def test_watchdog_raises_structured_stall_error(small_model):
+    """A head that can NEVER be admitted (and nothing to preempt) must
+    raise EngineStallError with a diagnostic snapshot, not spin to
+    max_iterations."""
+    cfg, params = small_model
+    eng = _tight(cfg, params, stall_limit=5)
+    eng.kv.can_admit = lambda *_: False
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=4))
+    with pytest.raises(EngineStallError) as err:
+        eng.run(max_iterations=100)
+    snap = err.value.snapshot
+    assert snap["queue"] == [0]
+    assert snap["deferral_age"] >= 5
+    assert snap["pool"]["free"] == eng.kv.alloc.num_pages
+    assert eng.iteration < 100       # raised well before exhaustion
+
+
+def test_debug_invariants_raises_structured_error(small_model):
+    """debug_invariants=True turns an allocator violation (here: a mapped
+    page forced back onto the free list) into AllocatorInvariantError
+    carrying the allocator snapshot."""
+    cfg, params = small_model
+    eng = _tight(cfg, params)
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=30))
+    eng.run(max_iterations=2, abort_in_flight=False)
+    assert eng.active_slots == [0]
+
+    eng.kv.alloc._free.append(eng.kv.alloc.pages_of(0)[0])
+    with pytest.raises(AllocatorInvariantError) as err:
+        eng.step()
+    assert "invariant" in str(err.value)
+    assert err.value.snapshot["pool"]["mapped"]

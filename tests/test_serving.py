@@ -19,7 +19,7 @@ def small_model():
 
 def _mk_engine(cfg, params, **kw):
     defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
-                    alpha=6.0, eos_token=1)
+                    alpha=6.0, eos_token=1, debug_invariants=True)
     defaults.update(kw)
     return PapiEngine(cfg, params, **defaults)
 
@@ -176,7 +176,7 @@ def test_dense_set_spec_len_widen_clamps_to_slab(small_model):
                      eos_token=no_eos, spec_len=2,
                      draft=(draft_cfg, draft_params))
     eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=19))
-    eng.run(max_iterations=2)
+    eng.run(max_iterations=2, abort_in_flight=False)
     assert eng.active_slots == [0]             # 3 + 19 + 2 = 24: zero headroom
     eng.set_spec_len(6)
     assert eng.spec_len == 2                   # clamped, not widened
@@ -188,7 +188,7 @@ def test_dense_set_spec_len_widen_clamps_to_slab(small_model):
                       eos_token=no_eos, spec_len=2,
                       draft=(draft_cfg, draft_params))
     eng2.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=19))
-    eng2.run(max_iterations=2)
+    eng2.run(max_iterations=2, abort_in_flight=False)
     eng2.set_spec_len(6)
     assert eng2.spec_len == 6
     assert eng2.run(max_iterations=200)[0].tokens == want

@@ -13,8 +13,7 @@ The contract under test (ISSUE 3 + ISSUE 5 acceptance):
     chunked prefill too, token-identically to the XLA engines, and
     `gather_kv_pages` never traces (poison-tested);
   * prompt truncation is GONE: prompts longer than the prefill window are
-    chunked through it and complete in full (ServeResult.prompt_truncated
-    is deprecated and always False);
+    chunked through it and complete in full;
   * the pool drains: after all requests finish, every page is free again.
 """
 import warnings
@@ -54,7 +53,7 @@ MIXED = [([3 + i, 5, 7, 11][: 2 + i % 3], 3 + 4 * i) for i in range(6)]
 
 def _run(cfg, params, reqs, **kw):
     defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
-                    alpha=6.0, eos_token=1)
+                    alpha=6.0, eos_token=1, debug_invariants=True)
     defaults.update(kw)
     eng = PapiEngine(cfg, params, **defaults)
     for i, (prompt, n) in enumerate(reqs):
@@ -152,7 +151,7 @@ def test_paged_set_spec_len_widen_rebudgets_or_clamps(small_model,
     # pages_for(3 + 27 + 2) = 8 — the two together promise the whole pool
     for i in range(2):
         eng.submit(ServeRequest(i, [3, 5, 7], max_new_tokens=27))
-    eng.run(max_iterations=2)
+    eng.run(max_iterations=2, abort_in_flight=False)
     assert eng.active_slots == [0, 1]
     assert eng.kv.alloc.available == 0
     eng.set_spec_len(6)             # nothing uncommitted: must clamp
@@ -169,7 +168,7 @@ def test_paged_set_spec_len_widen_rebudgets_or_clamps(small_model,
                       spec_len=2, draft=draft_model,
                       kv_layout="paged", page_size=4)
     eng2.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=20))
-    eng2.run(max_iterations=2)
+    eng2.run(max_iterations=2, abort_in_flight=False)
     eng2.set_spec_len(6)
     assert eng2.spec_len == 6
     res2 = eng2.run(max_iterations=300)
@@ -184,7 +183,8 @@ def test_paged_set_spec_len_widen_rebudgets_or_clamps(small_model,
                       spec_len=2, draft=draft_model,
                       kv_layout="paged", page_size=4, max_blocks=6)
     eng3.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=40))
-    eng3.run(max_iterations=2)      # admitted clamped to the 24-token table
+    eng3.run(max_iterations=2,      # admitted clamped to the 24-token table
+             abort_in_flight=False)
     assert eng3.kv.alloc.available > 0
     eng3.set_spec_len(6)
     assert eng3.spec_len == 2
@@ -294,7 +294,6 @@ def test_long_prompts_complete_untruncated(small_model, kv_layout):
     oneshot, _ = run(prefill_len=32)          # every prompt fits one window
     assert not any("prefill_len" in str(w.message) for w in caught)
     for i in range(3):
-        assert not results[i].prompt_truncated      # deprecated, always False
         assert results[i].tokens == oneshot[i].tokens
 
 

@@ -48,7 +48,7 @@ def _mesh(dp, tp):
 
 def _run(cfg, params, reqs, **kw):
     defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
-                    alpha=6.0, eos_token=1)
+                    alpha=6.0, eos_token=1, debug_invariants=True)
     defaults.update(kw)
     eng = PapiEngine(cfg, params, **defaults)
     for i, (prompt, n) in enumerate(reqs):

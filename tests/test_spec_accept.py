@@ -139,7 +139,6 @@ def test_admit_rejects_oversized_prompts(small_model):
     assert len(res) == 1
     assert res[0].finished_reason == "rejected"
     assert res[0].tokens == []
-    assert not res[0].prompt_truncated        # deprecated, always False
 
     # a short prompt still fits and gets a clamped-but-positive budget
     eng2 = PapiEngine(cfg, params, max_slots=2, cache_capacity=10,

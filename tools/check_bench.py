@@ -11,7 +11,13 @@ Two checks over BENCH_engine.json (written/merged by
      PAGED_SPEC_FLOOR of the dense speculative baseline recorded in the
      same section — the regression this guards is the one ISSUE 5 closed:
      speculative verify windows falling off the kernel/equal-context path
-     and back onto a pool-wide `gather_kv_pages` view per decode step.
+     and back onto a pool-wide `gather_kv_pages` view per decode step;
+  3. the ``pressure`` section (the --pressure oversubscribed trace) shows
+     every request COMPLETED and a p99 first-admission delay at or below
+     PRESSURE_DELAY_CEIL iterations — the regression this guards is
+     pool-pressure preemption silently dying and the queue head deferring
+     indefinitely behind long-running requests (its
+     ``tokens_bit_identical`` flag rides check 1).
 
 Usage:  python tools/check_bench.py [path/to/BENCH_engine.json]
 Exits non-zero with a message on the first violated check.
@@ -27,6 +33,13 @@ from pathlib import Path
 # leaves headroom for CI-runner noise without letting the gather creep
 # back)
 PAGED_SPEC_FLOOR = 0.8
+
+# p99 first-admission delay ceiling (iterations) for the --pressure trace.
+# Measured 27 on the 6x-oversubscribed 12-request trace (preempt_after=3);
+# the trace is deterministic, so 60 is pure headroom against future trace
+# tweaks — a dead preemption path shows up as hundreds of iterations (the
+# head waits for full pool drains) or an outright incomplete run.
+PRESSURE_DELAY_CEIL = 60
 
 
 def iter_identity_flags(node, path=""):
@@ -77,12 +90,33 @@ def main() -> int:
                   f"{paged / dense:.2f}x dense ({dense:.1f} tok/s), floor "
                   f"{PAGED_SPEC_FLOOR:.2f} — OK")
 
+    try:
+        pressure = bench["pressure"]
+        done, total = pressure["completed"], pressure["requests"]
+        p99 = pressure["admission_delay_p99"]
+    except KeyError as missing:
+        failures.append(f"pressure section incomplete or absent "
+                        f"(missing {missing}) — run "
+                        "benchmarks/engine_hotpath.py --pressure")
+    else:
+        if done < total:
+            failures.append(f"pressure trace lost requests: {done}/{total} "
+                            "completed")
+        if p99 > PRESSURE_DELAY_CEIL:
+            failures.append(
+                f"pressure admission delay unbounded: p99 {p99} iterations "
+                f"> ceiling {PRESSURE_DELAY_CEIL} (preemption not relieving "
+                "the deferring head?)")
+        if not failures:
+            print(f"pressure: {done}/{total} completed, admission delay "
+                  f"p99 {p99} <= {PRESSURE_DELAY_CEIL} iterations — OK")
+
     if failures:
         for f in failures:
             print(f"check_bench FAIL: {f}")
         return 1
     print(f"check_bench: {len(flags)} identity flags true, paged "
-          "speculative above floor")
+          "speculative above floor, pressure trace bounded")
     return 0
 
 
