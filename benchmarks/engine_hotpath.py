@@ -68,11 +68,23 @@ preempted (the gate `tools/check_bench.py` enforces) and for the
 preempted ones (requeue recomputes `prompt + tokens-so-far` through
 chunked prefill).  Merges a "pressure" section into BENCH_engine.json.
 
+``--arrivals RATE`` drives the continuous-batching streaming front end
+(`PapiEngine.serve`) with a seeded Poisson arrival process (RATE requests
+per iteration expected) across all four serving combos — greedy/speculative
+x dense/paged — and checks each against the OFFLINE oracle (same requests,
+`submit()` + `run()`): streamed tokens must be bit-identical, every request
+must complete, and the iteration-valued latency percentiles (queue delay,
+TTFT; deterministic for a fixed seed) plus wall-clock TTFT/TPOT p50/p99 are
+merged under an "arrivals" key.  `tools/check_bench.py` gates completion,
+identity, and a bounded p99 TTFT.  Exits 1 on any divergence or lost
+request.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
         PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
         PYTHONPATH=src python benchmarks/engine_hotpath.py --kv paged
         PYTHONPATH=src python benchmarks/engine_hotpath.py --long-prompt
         PYTHONPATH=src python benchmarks/engine_hotpath.py --pressure
+        PYTHONPATH=src python benchmarks/engine_hotpath.py --arrivals 0.5
 """
 from __future__ import annotations
 
@@ -177,16 +189,23 @@ def main() -> int:
                          "'pressure' section into --out and exits 1 unless "
                          "every request completes with its reference token "
                          "stream (never-preempted AND preempted)")
+    ap.add_argument("--arrivals", type=float, default=None, metavar="RATE",
+                    help="drive the continuous-batching serve() loop with a "
+                         "seeded Poisson arrival schedule (RATE requests "
+                         "per iteration) across greedy/speculative x "
+                         "dense/paged; gates streamed-token identity vs the "
+                         "offline oracle and records queue-delay/TTFT/TPOT "
+                         "p50/p99; merges an 'arrivals' section into --out")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
 
     if sum((bool(args.mesh), args.kv == "paged", args.long_prompt,
-            args.pressure)) > 1:
+            args.pressure, args.arrivals is not None)) > 1:
         # each mode is its own early-returning A/B section; combining them
         # would silently skip the other mode's identity gate
-        print("--mesh / --kv paged / --long-prompt are separate A/B modes: "
-              "run one per invocation (each merges its own section into "
-              "--out)")
+        print("--mesh / --kv paged / --long-prompt / --pressure / --arrivals "
+              "are separate A/B modes: run one per invocation (each merges "
+              "its own section into --out)")
         return 2
 
     # mesh sizing must precede the first jax backend touch
@@ -326,6 +345,118 @@ def main() -> int:
         if completed < len(reqs) or not (never_ok and preempted_ok):
             print("WARNING: oversubscribed trace lost requests or diverged "
                   "from the reference streams")
+            return 1
+        return 0
+
+    if args.arrivals is not None:
+        # Continuous-batching acceptance: a seeded Poisson arrival trace
+        # through `serve()` must stream, for every combo the engine serves
+        # (greedy/speculative x dense/paged), exactly the tokens the offline
+        # batch oracle commits — live admission, mixed prefill/decode waves,
+        # and the latency bookkeeping must be invisible to the streams.
+        # Iteration-valued queue-delay/TTFT percentiles are deterministic
+        # for the fixed seed (check_bench gates the p99 TTFT bound);
+        # wall-clock TTFT/TPOT ride along for the perf trajectory.
+        import numpy as np
+
+        from repro.serving import PapiEngine, ServeRequest, latency_summary
+        rate = args.arrivals
+        if rate <= 0:
+            print("--arrivals RATE must be > 0")
+            return 2
+        eos = cfg.vocab_size - 1      # never fires with random-init weights
+        rng = np.random.default_rng(0)
+        n_req = 10
+        prompts = [[int(t) for t in
+                    rng.integers(3, cfg.vocab_size - 1, int(rng.integers(3, 28)))]
+                   for _ in range(n_req)]
+        budgets = [int(rng.integers(4, 14)) for _ in range(n_req)]
+        # Poisson process: exponential inter-arrival gaps, floored to the
+        # engine's iteration clock (the serve loop polls once per iteration)
+        arrive = np.cumsum(np.floor(
+            rng.exponential(1.0 / rate, n_req)).astype(int))
+
+        def requests():
+            return [ServeRequest(i, list(prompts[i]),
+                                 max_new_tokens=budgets[i])
+                    for i in range(n_req)]
+
+        def schedule():
+            sched = [[] for _ in range(int(arrive[-1]) + 1)]
+            for i, it in enumerate(arrive):
+                sched[int(it)].append(ServeRequest(i, list(prompts[i]),
+                                                   max_new_tokens=budgets[i]))
+            return sched
+
+        def engine(**kw):
+            return PapiEngine(cfg, params, max_slots=4, cache_capacity=64,
+                              prefill_len=8, alpha=6.0, eos_token=eos,
+                              fused=True, debug_invariants=True, **kw)
+
+        combos = [
+            ("greedy_dense", {}),
+            ("greedy_paged", dict(kv_layout="paged", page_size=args.page_size,
+                                  max_blocks=64 // args.page_size)),
+            ("spec_dense", dict(spec_len=args.spec_len,
+                                draft=(cfg, draft_params))),
+            ("spec_paged", dict(spec_len=args.spec_len,
+                                draft=(cfg, draft_params),
+                                kv_layout="paged", page_size=args.page_size,
+                                max_blocks=64 // args.page_size)),
+        ]
+        section = {"rate": rate, "requests": n_req,
+                   "arrival_span_iters": int(arrive[-1]), "modes": {}}
+        all_ok = True
+        for label, kw in combos:
+            oracle = engine(**kw)
+            for r in requests():
+                oracle.submit(r)
+            want = {r.req_id: r.tokens
+                    for r in oracle.run(max_iterations=2000)}
+
+            eng = engine(**kw)
+            streams, finals = {}, {}
+            for ev in eng.serve(schedule()):
+                if ev.finished:
+                    finals[ev.req_id] = ev.result
+                else:
+                    streams.setdefault(ev.req_id, []).append(ev.token)
+            live = {rid: res.tokens for rid, res in finals.items()}
+            streamed_ok = all(streams.get(rid, []) == res.tokens
+                              for rid, res in finals.items())
+            same = live == want and streamed_ok
+            completed = len(finals)
+            summ = latency_summary(finals.values())
+            section["modes"][label] = {
+                "completed": completed,
+                "tokens_bit_identical": same,
+                "iterations": eng.iteration,
+                "queue_delay_iters_p50": summ["queue_delay_iters"]["p50"],
+                "queue_delay_iters_p99": summ["queue_delay_iters"]["p99"],
+                "ttft_iters_p50": summ["ttft_iters"]["p50"],
+                "ttft_iters_p99": summ["ttft_iters"]["p99"],
+                "ttft_s_p50": summ["ttft_s"]["p50"],
+                "ttft_s_p99": summ["ttft_s"]["p99"],
+                "tpot_s_p50": summ["tpot_s"]["p50"],
+                "tpot_s_p99": summ["tpot_s"]["p99"],
+            }
+            all_ok = all_ok and same and completed == n_req
+            print(f"{label}: {completed}/{n_req} completed in "
+                  f"{eng.iteration} iterations, ttft p50/p99 = "
+                  f"{summ['ttft_iters']['p50']:.0f}/"
+                  f"{summ['ttft_iters']['p99']:.0f} iters "
+                  f"({summ['ttft_s']['p99'] * 1e3:.0f}ms p99), tpot p99 = "
+                  f"{summ['tpot_s']['p99'] * 1e3:.1f}ms, tokens identical: "
+                  f"{same}")
+
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["arrivals"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"wrote {out}")
+        if not all_ok:
+            print("WARNING: streamed tokens diverged from the offline "
+                  "oracle or requests were lost under live arrivals")
             return 1
         return 0
 

@@ -43,6 +43,14 @@ and ``--fault kind[:prob]`` (repeatable; ``--fault-seed``) injects a
 deterministic schedule of admission failures / NaN logits / kernel
 corruption / step latency to exercise the engine's graceful-degradation
 paths — see docs/ARCHITECTURE.md, "Failure model & graceful degradation".
+
+Continuous batching: ``--arrivals RATE`` turns the trace into a LIVE
+Poisson arrival stream served by `PapiEngine.serve` — requests are admitted
+as they arrive, their prompt chunks ride the SAME device waves as running
+decodes (no prefill stall), tokens stream as they commit, and the launcher
+reports per-request queue delay / TTFT / TPOT plus p50/p99 aggregates.
+Composes with every flag above (--kv paged, --spec-len, --mesh, --fault,
+--deadline).
 """
 from __future__ import annotations
 
@@ -97,6 +105,14 @@ def main() -> None:
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed of the fault schedule (a pure function of "
                          "(seed, iteration), so runs replay exactly)")
+    ap.add_argument("--arrivals", type=float, default=None, metavar="RATE",
+                    help="continuous-batching mode: the trace arrives LIVE "
+                         "as a seeded Poisson process (RATE requests per "
+                         "iteration expected) streaming through "
+                         "PapiEngine.serve() — new prompts chunk-prefill in "
+                         "the same waves as running decodes; prints "
+                         "per-request queue-delay/TTFT/TPOT and the "
+                         "p50/p99 latency summary")
     args = ap.parse_args()
 
     # Mesh sizing must happen before the first jax backend touch, hence the
@@ -150,15 +166,56 @@ def main() -> None:
     # the 64-token output cap and the speculative window); `--kv paged`
     # serves the same lengths from the pooled pages.
     max_prompt = 256 - 64 - max(args.spec_len, 1) - 1
+    reqs = []
     for i, req in enumerate(generate_trace(args.task, args.requests,
                                            args.seed)):
         prompt = rng.integers(3, cfg.vocab_size,
                               size=min(req.input_len, max_prompt))
-        eng.submit(ServeRequest(i, prompt.tolist(),
-                                max_new_tokens=min(req.output_len, 64),
-                                deadline_s=args.deadline))
+        reqs.append(ServeRequest(i, prompt.tolist(),
+                                 max_new_tokens=min(req.output_len, 64),
+                                 deadline_s=args.deadline))
 
-    results = eng.run(max_iterations=2000)
+    if args.arrivals is not None:
+        # live mode: Poisson arrivals on the iteration clock, streamed
+        # through the continuous-batching serve loop
+        from repro.serving import latency_summary
+        arrive = np.cumsum(np.floor(
+            rng.exponential(1.0 / max(args.arrivals, 1e-9),
+                            len(reqs))).astype(int))
+        sched: list[list[ServeRequest]] = [[] for _ in
+                                           range(int(arrive[-1]) + 1)]
+        for r, it in zip(reqs, arrive):
+            sched[int(it)].append(r)
+        results = []
+        streamed = 0
+        for ev in eng.serve(sched, max_iterations=2000):
+            if not ev.finished:
+                streamed += 1
+                continue
+            res = ev.result
+            results.append(res)
+            line = (f"req {res.req_id:3d}: {len(res.tokens):3d} tokens "
+                    f"({res.finished_reason}), queue "
+                    f"{res.queue_delay_iters} iters, ttft "
+                    f"{res.ttft_iters} iters")
+            if res.ttft_s is not None:
+                line += f" / {res.ttft_s * 1e3:.0f}ms"
+            if res.tpot_s is not None:
+                line += f", tpot {res.tpot_s * 1e3:.1f}ms"
+            print(line)
+        summ = latency_summary(results)
+        print(f"\nstreamed {streamed} tokens live over "
+              f"{summ['n']} requests; latency percentiles:")
+        for field in ("queue_delay_iters", "ttft_iters", "ttft_s", "tpot_s"):
+            st = summ.get(field)
+            if st is not None:
+                unit = "iters" if field.endswith("iters") else "s"
+                print(f"  {field:17s} p50 {st['p50']:9.3f}  "
+                      f"p99 {st['p99']:9.3f}  ({unit})")
+    else:
+        for r in reqs:
+            eng.submit(r)
+        results = eng.run(max_iterations=2000)
     by_reason: dict[str, int] = {}
     for r in results:
         by_reason[r.finished_reason] = by_reason.get(r.finished_reason, 0) + 1

@@ -918,6 +918,20 @@ def prefill_chunk(cfg, params, cache, tokens, chunk_lens):
     its continuation token equals the decode step the preemption skipped
     and the caller-visible stream is unchanged.
     """
+    logits, cache = chunk_logits(cfg, params, cache, tokens, chunk_lens)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, cache
+
+
+def chunk_logits(cfg, params, cache, tokens, chunk_lens):
+    """`prefill_chunk`'s body, stopping at the last-valid-position logits.
+
+    Returns ``(logits [slots, V], cache)`` where ``logits[s]`` is the
+    distribution after the last valid token of slot s's chunk (garbage for
+    rows with ``chunk_lens[s] == 0``).  ``prefill_chunk`` is exactly
+    ``argmax(chunk_logits(...))``; the continuous-batching serve loop calls
+    this directly so it can fold fault injection between the logits and the
+    argmax inside ONE jitted program (see `serving/engine.py`)."""
     b, t = tokens.shape
     pos = cache["pos"]
     positions = pos[:, None] + jnp.arange(t)[None, :]
@@ -930,10 +944,38 @@ def prefill_chunk(cfg, params, cache, tokens, chunk_lens):
     idx = jnp.clip(chunk_lens - 1, 0, t - 1)
     h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
     logits = lm_logits(cfg, params, h_last)
-    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
     cache = dict(cache)
     cache["pos"] = pos + chunk_lens.astype(jnp.int32)
-    return nxt, cache
+    return logits[:, 0], cache
+
+
+def mixed_step(cfg, params, cache, tokens, chunk_lens, pin_mask, pin_pos):
+    """One continuous-batching wave: prefill chunks AND single-token decodes
+    in the SAME device program.
+
+    A decode is just a chunk of length 1 — row s with ``chunk_lens[s] == 1``
+    holding the slot's last committed token attends to everything written so
+    far plus itself, writes one KV entry at ``pos``, and its logits row is
+    the next-token distribution, bit-identical to `decode_step` on that slot
+    (same backbone ops on the same cache values).  So the serve loop packs
+    newly admitted requests' prompt chunks and ongoing decodes into one
+    ``[slots, P]`` window and dispatches a single program per iteration —
+    the NeuPIMs-style mixed prefill/decode sub-batch, in software.
+
+    ``pin_mask`` / ``pin_pos`` repair host-tracked prefill offsets: while a
+    slot is mid-prefill it also rides every *other* program the engine
+    dispatches (speculative verify, the plain fused step) as a masked
+    garbage row whose ``cache["pos"]`` drifts.  The wave re-anchors those
+    rows to the host's authoritative chunk offset before embedding
+    (``where(pin_mask, pin_pos, pos)``); decoding rows keep the
+    device-resident position.
+
+    Returns ``(logits [slots, V], cache)`` exactly like `chunk_logits`.
+    """
+    cache = dict(cache)
+    cache["pos"] = jnp.where(pin_mask, pin_pos,
+                             cache["pos"]).astype(jnp.int32)
+    return chunk_logits(cfg, params, cache, tokens, chunk_lens)
 
 
 def decode_step(cfg, params, cache, tokens, positions=None):

@@ -1,12 +1,14 @@
 from repro.serving.engine import (AllocatorInvariantError, EngineStallError,
                                   IterStats, PapiEngine, ServeRequest,
-                                  ServeResult)
+                                  ServeResult, TokenEvent)
 from repro.serving.faults import FaultInjector, parse_fault_specs
 from repro.serving.kv_pages import (BlockTables, PageAllocator, PagedKVManager,
                                     PageStats)
+from repro.serving.metrics import latency_summary, percentile
 from repro.serving.sampler import greedy, sample
 
 __all__ = ["AllocatorInvariantError", "BlockTables", "EngineStallError",
            "FaultInjector", "IterStats", "PageAllocator", "PagedKVManager",
            "PageStats", "PapiEngine", "ServeRequest", "ServeResult",
-           "greedy", "parse_fault_specs", "sample"]
+           "TokenEvent", "greedy", "latency_summary", "parse_fault_specs",
+           "percentile", "sample"]

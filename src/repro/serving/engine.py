@@ -182,9 +182,9 @@ from repro.configs.base import ModelConfig
 from repro.core.scheduler import PapiScheduler
 from repro.distributed.sharding import axis_rules, serve_rules
 from repro.models import (cache_shardings, decode_step, init_cache,
-                          init_paged_cache, paged_cache_shardings,
-                          param_shardings, prefill_chunk, prefill_to_pages,
-                          prefill_to_slots)
+                          init_paged_cache, mixed_step,
+                          paged_cache_shardings, param_shardings,
+                          prefill_chunk, prefill_to_pages, prefill_to_slots)
 from repro.models.layers import attn_impl
 from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
 from repro.serving.faults import FAULT_INF, FAULT_NAN, FAULT_NONE, FaultInjector
@@ -210,6 +210,33 @@ class ServeResult:
     prompt_len: int
     iterations: int
     finished_reason: str = "length"
+    # --- per-request serving latencies (see serving/metrics.py) ---
+    # wall-clock seconds; None when the phase never happened (a request
+    # cancelled in the queue has no TTFT).  The *_iters twins count engine
+    # iterations instead — deterministic for a fixed arrival schedule, so
+    # the BENCH gate can bound p99 TTFT without wall-clock flake.
+    queue_delay_s: float | None = None   # submit -> first admission
+    ttft_s: float | None = None          # submit -> first token
+    tpot_s: float | None = None          # mean inter-token gap after TTFT
+    queue_delay_iters: int | None = None
+    ttft_iters: int | None = None
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One streamed event from `PapiEngine.serve`: a committed token on a
+    live request, or (``finished=True``) the request's completion.  The
+    final event carries ``token == -1``, ``index == len(result.tokens)``,
+    the ``finished_reason`` and the full `ServeResult`; per-token events
+    index the caller-visible stream (a preempted request's indices continue
+    across its re-admission — the re-prefilled tokens are never re-sent)."""
+    req_id: int
+    token: int
+    index: int
+    iteration: int
+    finished: bool = False
+    reason: str | None = None
+    result: ServeResult | None = None
 
 
 @dataclasses.dataclass
@@ -279,6 +306,11 @@ class IterStats:
     kv_pages_free: int = 0       # pages on the free list
     kv_page_watermark: int = 0   # peak pages used over the engine lifetime
     kv_fragmentation: float = 0.0  # tail-of-page waste share of mapped rows
+    # continuous-batching serve loop only (zeros under offline run()):
+    arrivals: int = 0        # requests that arrived this iteration
+    queued: int = 0          # queue depth after this iteration's admission
+    prefill_slots: int = 0   # slots mid-chunked-prefill this iteration
+    decode_slots: int = 0    # slots that ran a decode step this iteration
 
 
 class PapiEngine:
@@ -414,6 +446,19 @@ class PapiEngine:
         self._submit_t: dict[int, float] = {}
         self.submit_iteration: dict[int, int] = {}
         self.admit_iteration: dict[int, int] = {}
+        # latency accounting for serve(): wall-clock admission / first-token
+        # stamps (setdefault — a preempted request keeps its originals)
+        self._admit_t: dict[int, float] = {}
+        self._first_tok_t: dict[int, float] = {}
+        self.first_token_iteration: dict[int, int] = {}
+        # --- continuous batching (serve()) ---
+        # prompt tokens prefilled so far per slot; a slot is MID-PREFILL
+        # while slot_offset < slot_prompt (only possible under serve(),
+        # which spreads chunk waves across iterations — offline admission
+        # always runs a prompt's waves to completion inside _admit_wave)
+        self.slot_offset: np.ndarray = np.zeros(max_slots, np.int64)
+        self.stream_chunks = False   # serve() flips this on for its lifetime
+        self._arrived_this_step = 0  # set by serve(), recorded in IterStats
         # chunked prefill masks its KV writes per slot; SSM state has no
         # sequence dim to mask, so stateful families keep single-window
         # prefill and reject longer prompts honestly
@@ -470,6 +515,100 @@ class PapiEngine:
             for s in list(self.active_slots):
                 self._finish_slot(s, "aborted")
         return self.results
+
+    def serve(self, arrivals, *, max_iterations: int = 100_000):
+        """Continuous-batching serve loop: a generator of `TokenEvent`s over
+        a LIVE arrival stream.
+
+        ``arrivals`` is any iterable polled once per engine iteration;
+        each ``next()`` yields the requests arriving at that iteration — a
+        `ServeRequest`, a list of them, or None for a quiet tick — and
+        exhaustion closes the arrival stream (the loop then drains the
+        queue and in-flight slots and returns).  The iteration counter is
+        the schedule's time axis: a trace replayed against the same engine
+        configuration admits, decodes, and finishes deterministically.
+
+        Every iteration the loop admits from the queue, advances newly
+        admitted long prompts by one chunk wave MIXED with the ongoing
+        decodes (TLP=1: one fused device program for both; speculative: the
+        chunk wave plus the fused verify program — either way no prefill
+        stall, no drain barrier), and yields each newly committed token as
+        a `TokenEvent`.  A finished request yields a final event carrying
+        its `ServeResult`, latencies stamped (queue delay / TTFT / TPOT —
+        see serving/metrics.py; aggregate with `latency_summary`).
+
+        Token streams are bit-identical to the offline ``submit()`` +
+        ``run()`` oracle for the same request set, for every engine
+        configuration (dense/paged, greedy/speculative, mesh, attn_pim) —
+        gated in `benchmarks/engine_hotpath.py --arrivals`.  PR 6 semantics
+        hold under live load: deadlines expire queued AND in-flight
+        requests, `cancel()` works mid-stream, pool-pressure preemption
+        requeues (the stream pauses, indices continue after re-admission,
+        nothing is re-sent), and fault injection degrades the mixed wave
+        onto the oracle path like any other poisoned step.
+
+        Iteration exhaustion aborts in-flight requests honestly
+        (``finished_reason="aborted"``, final events still delivered) —
+        same contract as ``run()``.
+        """
+        arrivals = iter(arrivals)
+        streamed: dict[int, int] = {}   # req_id -> tokens already yielded
+        reported = len(self.results)    # results already turned into events
+        stream_open = True
+        prev = self.stream_chunks
+        self.stream_chunks = True
+        try:
+            while True:
+                if stream_open:
+                    try:
+                        got = next(arrivals)
+                    except StopIteration:
+                        stream_open = False
+                    else:
+                        if got is None:
+                            got = []
+                        elif isinstance(got, ServeRequest):
+                            got = [got]
+                        for req in got:
+                            self.submit(req)
+                        self._arrived_this_step = len(got)
+                if not stream_open and not (self.queue or self.active_slots):
+                    return
+                if self.iteration >= max_iterations:
+                    for s in list(self.active_slots):
+                        self._finish_slot(s, "aborted")
+                    yield from self._drain_events(streamed, reported)
+                    return
+                self.step()
+                # live slots first (mid-flight tokens), then finished
+                # requests (their tail + the final event)
+                for s in self.active_slots:
+                    req = self.slot_req[s]
+                    done = (req.done if isinstance(req, _ResumedRequest)
+                            else [])
+                    full = list(done) + self.slot_tokens[s]
+                    sent = streamed.get(req.req_id, 0)
+                    for i in range(sent, len(full)):
+                        yield TokenEvent(req.req_id, full[i], i,
+                                         self.iteration)
+                    streamed[req.req_id] = max(sent, len(full))
+                new_reported = len(self.results)
+                yield from self._drain_events(streamed, reported)
+                reported = new_reported
+        finally:
+            self.stream_chunks = prev
+
+    def _drain_events(self, streamed: dict[int, int], reported: int):
+        """Final-event tail for every result appended since `reported`:
+        any not-yet-streamed tokens, then the completion event."""
+        for res in self.results[reported:]:
+            sent = streamed.pop(res.req_id, 0)
+            for i in range(sent, len(res.tokens)):
+                yield TokenEvent(res.req_id, res.tokens[i], i,
+                                 self.iteration)
+            yield TokenEvent(res.req_id, -1, len(res.tokens), self.iteration,
+                             finished=True, reason=res.finished_reason,
+                             result=res)
 
     def cancel(self, req_id: int) -> bool:
         """Cancel a queued or in-flight request: it finishes with
@@ -689,6 +828,199 @@ class PapiEngine:
             self._prefill_jit[key] = jax.jit(partial(prefill_chunk, cfg))
         return self._prefill_jit[key]
 
+    # --------------------------------------- continuous batching (serve())
+    def _get_wave(self, which: str):
+        """The serve loop's mixed prefill/decode wave (`models.mixed_step`):
+        prefill chunks and single-token decodes share one fixed-shape
+        [max_slots, prefill_len] program.  The main wave folds fault
+        injection + the finite-logits guard + the greedy argmax in with the
+        logits (one fetchable (tokens, bad) bundle); the draft wave only
+        advances the draft KV, nothing is fetched from it."""
+        cfg = self.draft_cfg if which == "draft" else self.cfg
+        key = ("wave_" + which, current_fc_variant(),
+               current_fc_interpret(), self.attn_pim)
+        if key not in self._prefill_jit:
+            if which == "main":
+                def wave(params, cache, toks, lens, pin_mask, pin_pos,
+                         fault):
+                    logits, cache = mixed_step(cfg, params, cache, toks,
+                                               lens, pin_mask, pin_pos)
+                    logits = _inject_fault(logits, fault)
+                    bad = ~jnp.all(jnp.isfinite(logits))
+                    return greedy(logits), bad, cache
+            else:
+                def wave(params, cache, toks, lens, pin_mask, pin_pos):
+                    _, cache = mixed_step(cfg, params, cache, toks, lens,
+                                          pin_mask, pin_pos)
+                    return cache
+            self._prefill_jit[key] = jax.jit(wave)
+        return self._prefill_jit[key]
+
+    def _get_oracle_wave(self):
+        """Degraded-mode wave: the XLA-attention / plain-FC oracle, never
+        fault-injected, keyed independently of the scheduler's assignment
+        (same contract as `_get_oracle`)."""
+        key = ("oracle_wave",)
+        if key not in self._prefill_jit:
+            cfg = self.cfg
+
+            def wave(params, cache, toks, lens, pin_mask, pin_pos):
+                logits, cache = mixed_step(cfg, params, cache, toks, lens,
+                                           pin_mask, pin_pos)
+                return greedy(logits), cache
+
+            self._prefill_jit[key] = jax.jit(wave)
+        return self._prefill_jit[key]
+
+    def _prefilling_slots(self) -> list[int]:
+        """Slots mid-chunked-prefill (serve() only: offline admission always
+        completes a prompt's waves before returning)."""
+        return [s for s in self.active_slots
+                if int(self.slot_offset[s]) < int(self.slot_prompt[s])]
+
+    def _tokens_written(self, s: int) -> int:
+        """KV tokens live slot `s` has actually committed: the chunk
+        frontier while mid-prefill, the decode position after."""
+        off = int(self.slot_offset[s])
+        return off if off < int(self.slot_prompt[s]) else self._slot_pos(s)
+
+    def _wave_rows(self, prefilling: list[int]):
+        """Build one chunk wave over the mid-prefill slots: each advances by
+        one (ragged-tail-masked) window from its running offset.  Returns
+        the host-side row arrays plus the slots whose prompt this wave
+        completes (their logits row is the request's first output token).
+        ``pin`` re-anchors each prefilling row's cache position to the
+        host-tracked offset — mid-prefill slots ride every OTHER dispatched
+        program as masked garbage rows whose device `pos` drifts."""
+        ctoks = np.zeros((self.max_slots, self.prefill_len), np.int32)
+        clens = np.zeros(self.max_slots, np.int32)
+        pin = np.zeros(self.max_slots, bool)
+        pin_pos = np.zeros(self.max_slots, np.int32)
+        finals: list[int] = []
+        for s in prefilling:
+            req = self.slot_req[s]
+            off, plen = int(self.slot_offset[s]), int(self.slot_prompt[s])
+            n = min(plen - off, self.prefill_len)
+            ctoks[s, :n] = req.prompt[off:off + n]
+            clens[s] = n
+            pin[s] = True
+            pin_pos[s] = off
+            if off + n == plen:
+                finals.append(s)
+        return ctoks, clens, pin, pin_pos, finals
+
+    def _finalize_first_tokens(self, finals: list[int],
+                               nxt_h: np.ndarray) -> None:
+        """A wave just completed these slots' prompts: commit each first
+        output token (same instant-finish semantics as offline admission —
+        <eos> or a 1-token budget frees the slot for the next iteration's
+        admission)."""
+        for s in finals:
+            req = self.slot_req[s]
+            tok = int(nxt_h[s])
+            self._note_first_token(req.req_id)
+            self.slot_tokens[s] = [tok]
+            self.slot_last[s] = tok
+            if tok == self.eos_token or self.slot_budget[s] <= 1:
+                reason = "eos" if tok == self.eos_token else "length"
+                self._emit(req, [tok], reason)
+                self.slot_req[s] = None
+                self.slot_tokens[s] = []
+                self.slot_last[s] = 0
+                if self.kv is not None:
+                    self.kv.release(s)
+
+    def _ensure_wave_pages(self, prefilling: list[int],
+                           clens: np.ndarray) -> None:
+        """Map the pages this wave's chunks write (serve() admitted with
+        only chunk 0 mapped).  Cannot fail: the admission reservation
+        covers the full prompt + budget + window."""
+        if self.kv is None:
+            return
+        for s in prefilling:
+            self.kv.ensure(s, int(self.slot_offset[s]) + int(clens[s]))
+
+    def _chunk_wave(self, prefilling: list[int]) -> None:
+        """Speculative serve iterations run the prefill chunks as their own
+        wave (prefill rows only) and let the decodes ride the fused
+        speculative program right after — two dispatches, still zero
+        prefill stall.  Runs under the ambient ("pu") FC variant exactly
+        like offline admission chunks, so first tokens are bit-identical to
+        the offline oracle."""
+        ctoks, clens, pin, pin_pos, finals = self._wave_rows(prefilling)
+        self._ensure_wave_pages(prefilling, clens)
+        self._sync_tables()
+        ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
+        pm, pp = jnp.asarray(pin), jnp.asarray(pin_pos)
+        with self._scope(), self._attn_scope():
+            nxt, bad, cache2 = self._get_wave("main")(
+                self.params, self.cache, ct, cl, pm, pp,
+                jnp.asarray(FAULT_NONE, jnp.int32))
+            self.cache = cache2
+            if self.draft_cfg is not None:
+                self.draft_cache = self._get_wave("draft")(
+                    self.draft_params, self.draft_cache, ct, cl, pm, pp)
+        for s in prefilling:
+            self.slot_offset[s] += int(clens[s])
+        if finals:
+            nxt_h, _ = self._fetch(nxt, bad)
+            self._finalize_first_tokens(finals, np.asarray(nxt_h))
+
+    def _mixed_wave_iteration(self, prefilling: list[int],
+                              decoding: list[int]):
+        """The tentpole TLP=1 serve iteration: ongoing decodes (chunks of
+        length 1 holding each slot's last token) and new requests' prefill
+        chunk waves run in ONE fused device program — no prefill stall, one
+        dispatch + one fetch per iteration.  Returns the `_decode_all`-shaped
+        (out, accepted, finished) bundle for the decoding slots."""
+        ctoks, clens, pin, pin_pos, finals = self._wave_rows(prefilling)
+        chunk_lens = clens.copy()        # prefill rows only, for the draft
+        for s in decoding:
+            ctoks[s, 0] = self.slot_last[s]
+            clens[s] = 1
+        self._ensure_wave_pages(prefilling, chunk_lens)
+        if self.kv is not None:
+            for s in decoding:
+                self.kv.ensure(s, self._slot_pos(s) + 1)
+        self._sync_tables()
+        ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
+        pm, pp = jnp.asarray(pin), jnp.asarray(pin_pos)
+        variant = self.scheduler.fc_assignment
+        with self._scope(), \
+                fc_variant(variant, interpret=self.pim_interpret), \
+                self._attn_scope():
+            nxt, bad, cache2 = self._get_wave("main")(
+                self.params, self.cache, ct, cl, pm, pp, self._fault_code())
+            if self.draft_cfg is not None and prefilling:
+                # the draft's KV covers the prompt positions (chunk rows
+                # only — the TLP=1 decode path never advances the draft)
+                self.draft_cache = self._get_wave("draft")(
+                    self.draft_params, self.draft_cache, ct,
+                    jnp.asarray(chunk_lens), pm, pp)
+            nxt_h, bad_h = self._fetch(nxt, bad)
+            if bad_h:
+                # non-finite logits: drop the poisoned wave (cache2 never
+                # assigned) and re-run the SAME wave on the oracle path
+                out_h = self._degraded_wave(ct, cl, pm, pp)
+            else:
+                self.cache = cache2
+                out_h = np.asarray(nxt_h)
+        for s in prefilling:
+            self.slot_offset[s] += int(chunk_lens[s])
+        self._finalize_first_tokens(finals, out_h)
+        return (out_h[:, None].astype(np.int32), np.ones(self.max_slots),
+                None)
+
+    def _degraded_wave(self, ct, cl, pm, pp) -> np.ndarray:
+        """Oracle re-run of a poisoned mixed wave (the wave twin of
+        `_degraded_step`): XLA attention, plain-PU FC, never injected."""
+        self.degraded_steps += 1
+        self._degraded_this_step = True
+        with attn_impl("xla"), fc_variant("pu"):
+            nxt, self.cache = self._get_oracle_wave()(
+                self.params, self.cache, ct, cl, pm, pp)
+            return np.asarray(self._fetch(nxt))
+
     def _admit(self) -> int:
         """Mixed continuous batching: fill free slots from the queue, one
         compiled `prefill_to_slots` call per admission wave (fixed-shape
@@ -721,18 +1053,47 @@ class PapiEngine:
         deadlines without sleeping."""
         return time.monotonic()
 
+    def _note_first_token(self, req_id: int) -> None:
+        """TTFT stamp: the request's first output token just materialized.
+        setdefault — a preempted request's re-admission produces a
+        CONTINUATION token through the same code path, and the original
+        first-token stamp must survive it."""
+        self._first_tok_t.setdefault(req_id, self._now())
+        self.first_token_iteration.setdefault(req_id, self.iteration)
+
+    def _latency_fields(self, req_id: int, n_tokens: int) -> dict:
+        """Per-request latency bundle for the ServeResult (see
+        serving/metrics.py for the metric definitions).  Missing phases
+        (never admitted / never produced a token) yield None, not 0 — the
+        summary excludes them instead of skewing percentiles."""
+        now = self._now()
+        t0, i0 = self._submit_t.get(req_id), self.submit_iteration.get(req_id)
+        ta, ia = self._admit_t.get(req_id), self.admit_iteration.get(req_id)
+        tf = self._first_tok_t.get(req_id)
+        i_f = self.first_token_iteration.get(req_id)
+        return dict(
+            queue_delay_s=(ta - t0) if (t0 is not None and ta is not None)
+            else None,
+            ttft_s=(tf - t0) if (t0 is not None and tf is not None) else None,
+            tpot_s=(((now - tf) / (n_tokens - 1)) if n_tokens > 1 else 0.0)
+            if tf is not None else None,
+            queue_delay_iters=(ia - i0)
+            if (i0 is not None and ia is not None) else None,
+            ttft_iters=(i_f - i0)
+            if (i0 is not None and i_f is not None) else None,
+        )
+
     def _emit(self, req, tokens: Sequence[int], reason: str) -> None:
         """Append the caller-visible result for `req`.  A preempted request
         re-entered admission as a `_ResumedRequest` whose prompt carries its
         own earlier output — reassemble the original stream here."""
         if isinstance(req, _ResumedRequest):
-            self.results.append(ServeResult(
-                req.req_id, req.done + list(tokens), req.orig_prompt_len,
-                self.iteration, reason))
+            toks, plen = req.done + list(tokens), req.orig_prompt_len
         else:
-            self.results.append(ServeResult(
-                req.req_id, list(tokens), len(req.prompt), self.iteration,
-                reason))
+            toks, plen = list(tokens), len(req.prompt)
+        self.results.append(ServeResult(
+            req.req_id, toks, plen, self.iteration, reason,
+            **self._latency_fields(req.req_id, len(toks))))
 
     def _finish_slot(self, s: int, reason: str) -> None:
         """Finish live slot `s` outside the normal eos/length path (timeout,
@@ -869,6 +1230,7 @@ class PapiEngine:
         self._admit_seq += 1
         self.slot_seq[slot] = self._admit_seq
         self.admit_iteration.setdefault(req.req_id, self.iteration)
+        self._admit_t.setdefault(req.req_id, self._now())
 
     def _admit_wave(self) -> tuple[int, bool]:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
@@ -907,7 +1269,14 @@ class PapiEngine:
                     break
                 self.queue.pop(0)
                 slot = free.pop(0)
-                self.kv.admit(slot, p + want + window, p)
+                # serve() maps only chunk 0's pages up front and lets each
+                # later wave map its own chunk (admission under LIVE
+                # pressure: the full budget is still reserved — ensure()
+                # cannot fail — but the pool watermark follows the prefill
+                # frontier instead of spiking to the whole prompt at once)
+                initial = (min(p, self.prefill_len) if self.stream_chunks
+                           else p)
+                self.kv.admit(slot, p + want + window, initial)
                 self.slot_budget[slot] = want
                 self._mark_admitted(slot, req)
                 batch_rows.append((slot, req))
@@ -949,52 +1318,75 @@ class PapiEngine:
             if self.draft_cfg is not None:
                 _, self.draft_cache = self._get_prefill("draft")(
                     self.draft_params, batch, self.draft_cache, src_dev)
-        # ---- chunks 1..: prompts longer than the window continue through
-        # the fixed-shape chunk step at their running offsets.  Every wave
-        # advances each pending slot by one (ragged-tail-masked) window; a
-        # slot's first output token comes from its FINAL chunk's logits.
-        # Nothing host-side depends on a wave's result (tokens come from
-        # req.prompt), so all waves dispatch back-to-back and the whole
-        # admission costs ONE device->host sync at the end.
-        pending = {slot: req for slot, req in batch_rows
-                   if len(req.prompt) > self.prefill_len}
-        offs = {slot: self.prefill_len for slot in pending}
-        wave_finals: list[tuple[Any, list[int]]] = []
-        while pending:
-            ctoks = np.zeros((self.max_slots, self.prefill_len), np.int32)
-            clens = np.zeros(self.max_slots, np.int32)
-            final: list[int] = []
-            for slot, req in list(pending.items()):
-                n = min(len(req.prompt) - offs[slot], self.prefill_len)
-                ctoks[slot, :n] = req.prompt[offs[slot]:offs[slot] + n]
-                clens[slot] = n
-                offs[slot] += n
-                if offs[slot] == len(req.prompt):
-                    final.append(slot)
-                    del pending[slot]
-            ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
-            with self._scope(), self._attn_scope():
-                nxt, self.cache = self._get_chunk("main")(
-                    self.params, self.cache, ct, cl)
-                if self.draft_cfg is not None:
-                    # the draft's KV must cover the same prompt positions
-                    _, self.draft_cache = self._get_chunk("draft")(
-                        self.draft_params, self.draft_cache, ct, cl)
-            if final:
-                wave_finals.append((nxt, final))
-        got = self._fetch(first, *(nxt for nxt, _ in wave_finals))
-        if wave_finals:
-            first_h = np.array(got[0])
-            for (_, final), nxt_h in zip(wave_finals, got[1:]):
-                for slot in final:
-                    first_h[slot] = int(nxt_h[slot])
-        else:
-            first_h = np.array(got)
-
         admitted = 0
+        if self.stream_chunks:
+            # ---- continuous batching: a prompt longer than the window does
+            # NOT stall this admission — the slot enters mid-prefill
+            # (slot_offset < slot_prompt) and step() advances it one chunk
+            # wave per iteration, MIXED with the ongoing decodes, until its
+            # final chunk produces the first token.  Short prompts finalize
+            # right here exactly like offline admission.
+            long_rows = [(slot, req) for slot, req in batch_rows
+                         if len(req.prompt) > self.prefill_len]
+            for slot, req in long_rows:
+                self.slot_req[slot] = req
+                self.slot_tokens[slot] = []
+                self.slot_offset[slot] = self.prefill_len
+                admitted += 1              # counts toward RLP
+            batch_rows = [(slot, req) for slot, req in batch_rows
+                          if len(req.prompt) <= self.prefill_len]
+            if not batch_rows:
+                return admitted, False
+            first_h = np.array(self._fetch(first))
+        else:
+            # ---- chunks 1..: prompts longer than the window continue
+            # through the fixed-shape chunk step at their running offsets.
+            # Every wave advances each pending slot by one
+            # (ragged-tail-masked) window; a slot's first output token comes
+            # from its FINAL chunk's logits.  Nothing host-side depends on a
+            # wave's result (tokens come from req.prompt), so all waves
+            # dispatch back-to-back and the whole admission costs ONE
+            # device->host sync at the end.
+            pending = {slot: req for slot, req in batch_rows
+                       if len(req.prompt) > self.prefill_len}
+            offs = {slot: self.prefill_len for slot in pending}
+            wave_finals: list[tuple[Any, list[int]]] = []
+            while pending:
+                ctoks = np.zeros((self.max_slots, self.prefill_len), np.int32)
+                clens = np.zeros(self.max_slots, np.int32)
+                final: list[int] = []
+                for slot, req in list(pending.items()):
+                    n = min(len(req.prompt) - offs[slot], self.prefill_len)
+                    ctoks[slot, :n] = req.prompt[offs[slot]:offs[slot] + n]
+                    clens[slot] = n
+                    offs[slot] += n
+                    if offs[slot] == len(req.prompt):
+                        final.append(slot)
+                        del pending[slot]
+                ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
+                with self._scope(), self._attn_scope():
+                    nxt, self.cache = self._get_chunk("main")(
+                        self.params, self.cache, ct, cl)
+                    if self.draft_cfg is not None:
+                        # the draft's KV must cover the same prompt positions
+                        _, self.draft_cache = self._get_chunk("draft")(
+                            self.draft_params, self.draft_cache, ct, cl)
+                if final:
+                    wave_finals.append((nxt, final))
+            got = self._fetch(first, *(nxt for nxt, _ in wave_finals))
+            if wave_finals:
+                first_h = np.array(got[0])
+                for (_, final), nxt_h in zip(wave_finals, got[1:]):
+                    for slot in final:
+                        first_h[slot] = int(nxt_h[slot])
+            else:
+                first_h = np.array(got)
+
         instant_finish = False
         for slot, req in batch_rows:
+            self.slot_offset[slot] = len(req.prompt)
             tok = int(first_h[slot])
+            self._note_first_token(req.req_id)
             self.slot_tokens[slot] = [tok]
             self.slot_last[slot] = tok
             # prefill already produced the first output token
@@ -1130,6 +1522,8 @@ class PapiEngine:
             admitted += self._admit()
             if self._deferred_head is None:
                 self._defer_age = 0
+        arrived = self._arrived_this_step
+        self._arrived_this_step = 0
         active = self.active_slots
         if not active:
             # Still a step: count it, or `run(max_iterations=)` is a dead
@@ -1143,27 +1537,51 @@ class PapiEngine:
             return
 
         speculating = self.spec_len > 1 and self.draft_cfg is not None
-        if self.kv is not None:
-            # map pages for the KV this iteration writes (positions
-            # pos..pos+tlp-1).  Cannot fail: the admission reservation
-            # covers prompt + max_new + window, and coverage never exceeds
-            # it before the request finishes.
-            tlp = self.spec_len if speculating else 1
-            for s in active:
-                self.kv.ensure(s, self._slot_pos(s) + tlp)
-            self._sync_tables()
+        prefilling = self._prefilling_slots() if self.stream_chunks else []
+        chunked = len(prefilling)
+        if prefilling and not speculating:
+            # TLP=1 continuous batching: decodes + prefill chunks in ONE
+            # fused program (the wave handles its own page mapping)
+            decoding = [s for s in active if s not in set(prefilling)]
+            out, accepted, _fin = self._mixed_wave_iteration(prefilling,
+                                                             decoding)
+        else:
+            if prefilling:
+                # speculative serve: advance the prefill frontier first so a
+                # slot finishing its prompt this iteration rides the verify
+                # program below, exactly like offline admission
+                self._chunk_wave(prefilling)
+            pset = set(prefilling)
+            decoding = [s for s in self.active_slots
+                        if s not in pset
+                        or int(self.slot_offset[s])
+                        >= int(self.slot_prompt[s])]
+            out = np.zeros((self.max_slots, 1), np.int32)
+            accepted = np.zeros(self.max_slots)
+            if decoding:
+                if self.kv is not None:
+                    # map pages for the KV this iteration writes (positions
+                    # pos..pos+tlp-1).  Cannot fail: the admission
+                    # reservation covers prompt + max_new + window, and
+                    # coverage never exceeds it before the request finishes.
+                    tlp = self.spec_len if speculating else 1
+                    for s in decoding:
+                        self.kv.ensure(s, self._slot_pos(s) + tlp)
+                    self._sync_tables()
 
-        # the eos flags in the bundle are a device-side convenience for
-        # callers (launch.serve); the host loop below re-derives finishes
-        # anyway since length-based finishes need per-request budgets
-        out, accepted, _fin = self._decode_all()
+                # the eos flags in the bundle are a device-side convenience
+                # for callers (launch.serve); the host loop below re-derives
+                # finishes anyway since length-based finishes need
+                # per-request budgets
+                out, accepted, _fin = self._decode_all()
 
         # host-side bookkeeping: append tokens, detect eos / length
         iter_tokens: list[int] = []
         finished_flags = np.zeros(self.max_slots, bool)
-        for s in active:
+        for s in decoding:
             req = self.slot_req[s]
-            assert req is not None
+            if req is None:      # instant-finished by this iteration's wave
+                continue
             n_acc = int(accepted[s])
             for j in range(n_acc):
                 tok = int(out[s, j])
@@ -1210,14 +1628,14 @@ class PapiEngine:
         # flags go to the scheduler as an array — it sums them itself.
         self.scheduler.observe_counts(finished_flags, admitted)
         self.iteration += 1
-        self._watchdog(admitted > 0 or len(iter_tokens) > 0
+        self._watchdog(admitted > 0 or len(iter_tokens) > 0 or chunked > 0
                        or len(self.results) > results0
                        or self.preemptions > preempted0)
         self._check_invariants()
         kv_used = kv_free = kv_peak = 0
         kv_frag = 0.0
         if self.kv is not None:
-            live_tokens = sum(self._slot_pos(s)
+            live_tokens = sum(self._tokens_written(s)
                               for s in range(self.max_slots)
                               if self.slot_req[s] is not None)
             ps = self.kv.stats(live_tokens)
@@ -1233,13 +1651,18 @@ class PapiEngine:
             ai_estimate=self.scheduler.ai_estimate,
             fc_variant=self.scheduler.fc_assignment,
             new_tokens=len(iter_tokens),
-            accepted=float(np.mean(accepted[active])) if len(active) else 0.0,
+            accepted=(float(np.mean(accepted[decoding]))
+                      if len(decoding) else 0.0),
             wall_s=time.perf_counter() - t0,
             transfers=self.host_transfers - transfers0,
             kv_pages_used=kv_used,
             kv_pages_free=kv_free,
             kv_page_watermark=kv_peak,
             kv_fragmentation=kv_frag,
+            arrivals=arrived,
+            queued=len(self.queue),
+            prefill_slots=chunked,
+            decode_slots=len(decoding),
         ))
 
     def set_spec_len(self, tlp: int) -> None:

@@ -135,7 +135,16 @@ def parse_fault_specs(specs: list[str], *, seed: int = 0,
         if kind not in KINDS:
             raise ValueError(
                 f"unknown fault kind {kind!r} (choose from {KINDS})")
-        probs[kind] = float(prob) if prob else 1.0
+        try:
+            p = float(prob) if prob else 1.0
+        except ValueError:
+            raise ValueError(
+                f"fault spec {spec!r}: probability {prob!r} is not a number"
+            ) from None
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(
+                f"fault spec {spec!r}: probability {p} outside [0, 1]")
+        probs[kind] = p
     return FaultInjector(seed=seed, admit_p=probs["admit"],
                          nan_p=probs["nan"], kernel_p=probs["kernel"],
                          latency_p=probs["latency"], latency_s=latency_s)

@@ -319,6 +319,15 @@ class PagedKVManager:
                                  self.pages_for(initial_tokens))
         self.tables.set_row(slot, pages)
 
+    def coverage(self, slot: int) -> int:
+        """Tokens the slot's mapped pages can hold right now.  Under the
+        continuous-batching serve loop this is the live-pressure frontier:
+        admission maps only chunk 0's pages and each later wave `ensure()`s
+        its own chunk, so coverage trails the reserved budget until the
+        prompt finishes prefilling (the pool watermark follows demand, not
+        the worst case)."""
+        return len(self.alloc.pages_of(slot)) * self.page_size
+
     def ensure(self, slot: int, tokens: int) -> int:
         """Grow slot coverage to `tokens`; returns pages newly mapped."""
         have = len(self.alloc.pages_of(slot))

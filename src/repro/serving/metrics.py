@@ -1,0 +1,64 @@
+"""Latency accounting for the continuous-batching serve loop.
+
+The streaming front end (`PapiEngine.serve`) stamps every request with the
+standard serving latencies:
+
+  queue delay   submit -> first admission (how long the request sat behind
+                the pool; PR 6's deferral/preemption machinery bounds it)
+  TTFT          submit -> first streamed token (queue delay + prefill,
+                the user-visible "time to first token")
+  TPOT          mean gap between subsequent tokens ("time per output
+                token"; (finish - first token) / (n_tokens - 1))
+
+Each comes in two flavours: wall-clock seconds (what an operator cares
+about, noisy on shared CI runners) and engine *iterations* (deterministic
+for a fixed arrival schedule, so `tools/check_bench.py` can gate p99 TTFT
+without flaking).  `latency_summary` aggregates a batch of `ServeResult`s
+into p50/p99 per metric — the shape recorded in BENCH_engine.json's
+``arrivals`` section.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 for an empty input.
+
+    Nearest-rank (not interpolated) so iteration-valued metrics stay
+    integers and the BENCH gate compares exact values across runs.
+    """
+    if not values:
+        return 0.0
+    vals = sorted(values)
+    if q <= 0:
+        return vals[0]
+    rank = max(1, -(-len(vals) * q // 100))  # ceil(len * q / 100)
+    return vals[min(int(rank), len(vals)) - 1]
+
+
+# ServeResult fields aggregated by latency_summary (each -> {p50, p99, mean})
+METRIC_FIELDS = ("queue_delay_s", "ttft_s", "tpot_s",
+                 "queue_delay_iters", "ttft_iters")
+
+
+def latency_summary(results: Iterable) -> dict:
+    """Aggregate per-request latencies into p50/p99/mean per metric.
+
+    ``results`` is any iterable of objects with the `METRIC_FIELDS`
+    attributes (normally `ServeResult`s from a serve() run).  Requests
+    that never produced a token (cancelled/rejected before TTFT) carry
+    ``ttft_s/tpot_s`` of None and are excluded from those metrics rather
+    than dragging the percentiles to zero.
+    """
+    results = list(results)
+    out: dict = {"n": len(results)}
+    for field in METRIC_FIELDS:
+        vals = [getattr(r, field) for r in results]
+        vals = [v for v in vals if v is not None]
+        out[field] = {
+            "p50": percentile(vals, 50),
+            "p99": percentile(vals, 99),
+            "mean": (sum(vals) / len(vals)) if vals else 0.0,
+        }
+    return out

@@ -7,6 +7,7 @@ from _propcompat import given, settings, st
 from repro.configs import get_config
 from repro.configs.paper_models import GPT3_66B, GPT3_175B, LLAMA_65B
 from repro.core import ai, pim
+from repro.core.calibration import calibrate_alpha_model
 from repro.core.scheduler import FC_PIM, FC_PU, PapiScheduler
 from repro.core.system import (
     calibrate_alpha_system,
@@ -114,6 +115,54 @@ class TestScheduler:
     def test_attention_always_pinned(self):
         s = self._sched()
         assert s.attention_assignment == "attn_pim"
+
+    @pytest.mark.parametrize("name", ["granite-8b", "olmoe-1b-7b"])
+    @pytest.mark.parametrize("tlp", [1, 2, 4, 8])
+    def test_crossover_sweep_around_calibrated_alpha(self, name, tlp):
+        """(rlp, tlp) grid straddling the *calibrated* alpha: the decision
+        must be exactly the threshold function of effective parallelism,
+        with a single monotone pim->pu flip as parallelism rises (the MoE
+        top_k/E correction shifts the flip point, §6.5)."""
+        cfg = get_config(name)
+        alpha = calibrate_alpha_model(cfg)
+        assert alpha > 0
+        # effective parallelism = rlp*tlp*factor; pick rlps bracketing the
+        # boundary rlp = alpha/(tlp*factor) plus the extremes
+        factor = ai.effective_parallelism(cfg, 1, 1)
+        boundary = alpha / (tlp * factor)
+        rlps = sorted({1, 2, 512} | {
+            max(1, int(boundary) + d) for d in (-2, -1, 0, 1, 2)})
+        decisions = []
+        for rlp in rlps:
+            s = PapiScheduler(cfg, alpha=alpha, tlp=tlp)
+            s.rlp = rlp
+            got = s._decide()
+            eff = ai.effective_parallelism(cfg, rlp, tlp)
+            assert got == (FC_PU if eff > alpha else FC_PIM), (
+                f"{name}: rlp={rlp} tlp={tlp} eff={eff} alpha={alpha}")
+            decisions.append((eff, got))
+        # monotone: sorted by effective parallelism, pu never reverts to pim
+        decisions.sort(key=lambda t: t[0])
+        flags = [d == FC_PU for _, d in decisions]
+        assert flags == sorted(flags), (
+            f"{name} tlp={tlp}: non-monotone flip sequence {decisions}")
+        # the grid actually exercises both sides of the boundary
+        assert flags[0] is False and flags[-1] is True
+
+    def test_observe_counts_accepts_arrays(self):
+        """Regression: the fused engine hands device bundles (bool / int
+        arrays, numpy scalars) straight to observe_counts — they must sum
+        arithmetically, not truthiness-collapse."""
+        s = self._sched(alpha=32.0, tlp=1)
+        s.initial_schedule(40, 1)
+        s.observe_counts(np.array([True, False, True, True]),
+                         admitted=np.int64(2))
+        assert s.rlp == 40 - 3 + 2
+        s.observe_counts(np.zeros(8, dtype=np.int32))
+        assert s.rlp == 39
+        s.observe_counts(np.array([5, 4]), admitted=np.array([1, 1]))
+        assert s.rlp == 39 - 9 + 2
+        assert s.fc_assignment == FC_PIM  # 32*1 <= alpha: flipped to PIM
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,76 @@
+"""Direct unit coverage for serving/faults.py (previously only exercised
+indirectly through engine tests): FaultInjector determinism and the
+parse_fault_specs validation surface."""
+import pytest
+
+from repro.serving.faults import (FAULT_INF, FAULT_NAN, FAULT_NONE,
+                                  FaultInjector, parse_fault_specs)
+
+
+def test_injector_pure_function_of_seed_and_step():
+    """Same (seed, iteration) -> same decision, every consult, across
+    injector instances and repeated calls (a re-consulted step replays)."""
+    a = FaultInjector(seed=42, admit_p=0.5, nan_p=0.3, kernel_p=0.3,
+                      latency_p=0.5)
+    b = FaultInjector(seed=42, admit_p=0.5, nan_p=0.3, kernel_p=0.3,
+                      latency_p=0.5)
+    for step in range(200):
+        assert a.admission_blocked(step) == b.admission_blocked(step)
+        assert a.logits_fault(step) == b.logits_fault(step)
+        assert a.step_delay(step) == b.step_delay(step)
+        # repeated consult of the same step replays identically
+        assert a.logits_fault(step) == b.logits_fault(step)
+    assert a.counts == b.counts
+    # decisions actually vary over steps (the schedule isn't constant)
+    hits = [FaultInjector(seed=42, nan_p=0.3).logits_fault(s) == FAULT_NAN
+            for s in range(100)]
+    assert any(hits) and not all(hits)
+
+
+def test_injector_different_seeds_differ():
+    sched = [FaultInjector(seed=s, nan_p=0.5).logits_fault(i)
+             for s in (0, 1) for i in range(50)]
+    assert sched[:50] != sched[50:]
+
+
+def test_injector_window_respected():
+    inj = FaultInjector(seed=7, admit_p=1.0, nan_p=1.0, latency_p=1.0,
+                        start=10, stop=20)
+    for step in range(30):
+        inside = 10 <= step < 20
+        assert inj.admission_blocked(step) == inside
+        assert (inj.logits_fault(step) != FAULT_NONE) == inside
+        assert (inj.step_delay(step) > 0) == inside
+    assert inj.counts["admit"] == inj.counts["nan"] == 10
+
+
+def test_nan_wins_over_kernel():
+    inj = FaultInjector(seed=0, nan_p=1.0, kernel_p=1.0)
+    assert inj.logits_fault(3) == FAULT_NAN
+    only_kernel = FaultInjector(seed=0, kernel_p=1.0)
+    assert only_kernel.logits_fault(3) == FAULT_INF
+
+
+def test_parse_specs_builds_injector():
+    inj = parse_fault_specs(["nan:0.2", "admit"], seed=5, latency_s=0.01)
+    assert inj.seed == 5
+    assert inj.nan_p == pytest.approx(0.2)
+    assert inj.admit_p == 1.0
+    assert inj.kernel_p == inj.latency_p == 0.0
+    assert parse_fault_specs([]) is None
+
+
+def test_parse_specs_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_fault_specs(["gamma-ray"])
+
+
+@pytest.mark.parametrize("spec", ["nan:1.5", "admit:-0.1", "kernel:2"])
+def test_parse_specs_rejects_out_of_range_probability(spec):
+    with pytest.raises(ValueError, match=r"outside \[0, 1\]"):
+        parse_fault_specs([spec])
+
+
+def test_parse_specs_rejects_non_numeric_probability():
+    with pytest.raises(ValueError, match="not a number"):
+        parse_fault_specs(["nan:often"])

@@ -365,3 +365,64 @@ def test_debug_invariants_raises_structured_error(small_model):
         eng.step()
     assert "invariant" in str(err.value)
     assert err.value.snapshot["pool"]["mapped"]
+
+
+# ------------------------------------------------------- streaming front end
+
+def _serve_live(eng, sched):
+    streams: dict[int, list[int]] = {}
+    finals = {}
+    for ev in eng.serve(sched):
+        if ev.finished:
+            finals[ev.req_id] = ev.result
+        else:
+            streams.setdefault(ev.req_id, []).append(ev.token)
+    return streams, finals
+
+
+def test_serve_preemption_streams_bit_identical(small_model):
+    """Pool-pressure preemption mid-STREAM: every live stream — the
+    preempted request included — still equals the unconstrained dense
+    offline serve, nothing is re-streamed, and the pool drains."""
+    cfg, params = small_model
+    want = _serve(_engine(cfg, params), PRESSURE_REQS)
+
+    eng = _tight(cfg, params, preempt_after=3)
+    sched = [[ServeRequest(i, list(p), max_new_tokens=n)]
+             for i, (p, n) in enumerate(PRESSURE_REQS)]
+    streams, finals = _serve_live(eng, sched)
+
+    assert eng.preemptions >= 1
+    for i in range(len(PRESSURE_REQS)):
+        assert streams[i] == want[i].tokens, i
+        assert finals[i].finished_reason == "length"
+    _assert_drained(eng)
+
+
+def test_serve_cancel_and_timeout_mid_stream(small_model):
+    """PR 6 semantics through the streaming front end: a QUEUED request
+    times out without ever streaming a token; an in-flight cancel ends the
+    stream with reason 'cancelled', keeping the tokens already streamed."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_slots=1)
+    clock = {"now": 0.0}
+    eng._now = lambda: clock["now"]
+    sched = [[ServeRequest(0, [3, 5, 7], max_new_tokens=60)],
+             [ServeRequest(1, [4, 5, 7], max_new_tokens=30,
+                           deadline_s=5.0)]]
+    streams: dict[int, list[int]] = {}
+    finals = {}
+    for ev in eng.serve(sched):
+        if ev.finished:
+            finals[ev.req_id] = ev.result
+            continue
+        streams.setdefault(ev.req_id, []).append(ev.token)
+        if ev.req_id == 0 and len(streams[0]) == 4:
+            clock["now"] = 10.0            # expire the queued deadline
+            assert eng.cancel(0) is True   # cancel the one mid-stream
+
+    assert finals[0].finished_reason == "cancelled"
+    assert len(streams[0]) >= 4
+    assert finals[0].tokens == streams[0]
+    assert finals[1].finished_reason == "timeout"
+    assert finals[1].tokens == [] and 1 not in streams

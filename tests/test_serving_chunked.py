@@ -23,7 +23,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models import (decode_step, init_cache, init_params, mixed_step,
+                          prefill)
 from repro.serving import PapiEngine, ServeRequest
 
 
@@ -177,3 +178,55 @@ def test_paged_long_prompt_beyond_dense_capacity(small_model):
     res = paged.run(max_iterations=100)
     assert res[0].tokens == want and res[0].finished_reason == "length"
     assert paged.kv.alloc.mapped_count == 0      # pool drained afterwards
+
+
+def test_mixed_step_chunk_of_one_is_decode_step(small_model):
+    """A decode is a chunk of length 1: `mixed_step` on a row with
+    chunk_lens == 1 holding the slot's last token is BITWISE `decode_step`
+    on that slot — same logits, same cache writes, same pos advance.  This
+    is the contract that lets the serve loop pack ongoing decodes and
+    prefill waves into one device program."""
+    cfg, params = small_model
+    cache = init_cache(cfg, 2, 32)
+    prompts = jnp.asarray([[3, 5, 7, 11], [4, 6, 8, 10]], jnp.int32)
+    logits, cache = prefill(
+        cfg, params,
+        {"tokens": prompts, "prompt_lens": jnp.asarray([4, 4], jnp.int32)},
+        cache)
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    want_logits, want_cache = decode_step(cfg, params, cache, toks[:, None])
+
+    window = jnp.zeros((2, 8), jnp.int32).at[:, 0].set(toks)
+    got_logits, got_cache = mixed_step(
+        cfg, params, cache, window,
+        chunk_lens=jnp.ones(2, jnp.int32),
+        pin_mask=jnp.zeros(2, bool),
+        pin_pos=jnp.zeros(2, jnp.int32))
+
+    np.testing.assert_array_equal(np.asarray(got_logits),
+                                  np.asarray(want_logits[:, 0]))
+    for a, b in zip(jax.tree_util.tree_leaves(want_cache),
+                    jax.tree_util.tree_leaves(got_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_streams_chunked_admission_bit_identical(small_model):
+    """A 33-token prompt arriving LIVE, mid-decode of another request,
+    streams exactly the one-shot oracle's tokens — its chunk waves ride
+    the mixed serve program without perturbing the running decode."""
+    cfg, params = small_model
+    long_prompt = [int(t) for t in
+                   np.random.default_rng(0).integers(3, cfg.vocab_size - 1,
+                                                     33)]
+    short = [3, 5, 7]
+    eng = _engine(cfg, params)
+    sched = [[ServeRequest(0, short, max_new_tokens=12)], [],
+             [ServeRequest(1, long_prompt, max_new_tokens=6)]]
+    streams: dict[int, list[int]] = {}
+    for ev in eng.serve(sched):
+        if not ev.finished:
+            streams.setdefault(ev.req_id, []).append(ev.token)
+    assert streams[0] == _oracle(cfg, params, short, 12)
+    assert streams[1] == _oracle(cfg, params, long_prompt, 6)
+    assert any(s.prefill_slots and s.decode_slots for s in eng.stats)

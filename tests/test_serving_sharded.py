@@ -306,3 +306,30 @@ def test_sharded_fc_gemv_col_banks_bit_identical():
                     out_specs=P(None, "model"), check_rep=False)(x, w)
     want = fc_gemv(x, w, interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@needs8
+def test_mesh_serve_streaming_matches_unsharded(small_model):
+    """Continuous-batching serve() composes with the mesh: live staggered
+    arrivals under 8-way tensor parallelism stream the exact token
+    sequences of the unsharded offline batch run."""
+    cfg, params = small_model
+    want, _ = _run(cfg, params, REQS)
+
+    eng = PapiEngine(cfg, params, max_slots=4, cache_capacity=64,
+                     prefill_len=8, alpha=6.0, eos_token=1,
+                     debug_invariants=True, mesh=_mesh(1, 8))
+    sched = []
+    for i, (prompt, n) in enumerate(REQS):
+        sched.append([ServeRequest(i, prompt, max_new_tokens=n)])
+        sched.append([])
+    streams: dict[int, list[int]] = {}
+    finals = {}
+    for ev in eng.serve(sched):
+        if ev.finished:
+            finals[ev.req_id] = (ev.result.tokens, ev.result.finished_reason)
+        else:
+            streams.setdefault(ev.req_id, []).append(ev.token)
+    assert finals == want
+    for rid, (toks, _) in finals.items():
+        assert streams.get(rid, []) == toks

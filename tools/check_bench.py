@@ -17,7 +17,13 @@ Two checks over BENCH_engine.json (written/merged by
      PRESSURE_DELAY_CEIL iterations — the regression this guards is
      pool-pressure preemption silently dying and the queue head deferring
      indefinitely behind long-running requests (its
-     ``tokens_bit_identical`` flag rides check 1).
+     ``tokens_bit_identical`` flag rides check 1);
+  4. the ``arrivals`` section (the --arrivals continuous-batching trace)
+     shows, for EVERY serving combo (greedy/speculative x dense/paged),
+     all requests completed and a p99 TTFT at or below ARRIVALS_TTFT_CEIL
+     iterations — the regressions this guards are the serve loop losing or
+     stalling queued requests under live load and admission waves starving
+     first tokens (streamed-vs-oracle identity rides check 1).
 
 Usage:  python tools/check_bench.py [path/to/BENCH_engine.json]
 Exits non-zero with a message on the first violated check.
@@ -40,6 +46,14 @@ PAGED_SPEC_FLOOR = 0.8
 # tweaks — a dead preemption path shows up as hundreds of iterations (the
 # head waits for full pool drains) or an outright incomplete run.
 PRESSURE_DELAY_CEIL = 60
+
+# p99 TTFT ceiling (iterations) for the --arrivals Poisson trace.  The
+# schedule is seeded, so the iteration-valued TTFT is deterministic:
+# measured p99 of 2 iterations across all four combos at rate 0.5 with 4
+# slots; 16 is pure headroom against trace tweaks — a starved admission
+# path (prefill stalling behind decodes, or waves never draining the
+# queue) shows up as tens of iterations.
+ARRIVALS_TTFT_CEIL = 16
 
 
 def iter_identity_flags(node, path=""):
@@ -111,12 +125,44 @@ def main() -> int:
             print(f"pressure: {done}/{total} completed, admission delay "
                   f"p99 {p99} <= {PRESSURE_DELAY_CEIL} iterations — OK")
 
+    try:
+        arrivals = bench["arrivals"]
+        total = arrivals["requests"]
+        modes = arrivals["modes"]
+    except KeyError as missing:
+        failures.append(f"arrivals section incomplete or absent "
+                        f"(missing {missing}) — run "
+                        "benchmarks/engine_hotpath.py --arrivals 0.5")
+    else:
+        bad = False
+        for label, mode in sorted(modes.items()):
+            done = mode.get("completed", 0)
+            ttft = mode.get("ttft_iters_p99")
+            if done < total:
+                failures.append(f"arrivals/{label} lost requests: "
+                                f"{done}/{total} completed under live load")
+                bad = True
+            if ttft is None or ttft > ARRIVALS_TTFT_CEIL:
+                failures.append(
+                    f"arrivals/{label} TTFT unbounded: p99 {ttft} iterations "
+                    f"> ceiling {ARRIVALS_TTFT_CEIL} (admission waves "
+                    "starving first tokens?)")
+                bad = True
+        if not bad and modes:
+            worst = max(m["ttft_iters_p99"] for m in modes.values())
+            print(f"arrivals: {len(modes)} combos completed {total}/{total}, "
+                  f"worst p99 TTFT {worst:.0f} <= {ARRIVALS_TTFT_CEIL} "
+                  "iterations — OK")
+        elif not modes:
+            failures.append("arrivals section has no modes")
+
     if failures:
         for f in failures:
             print(f"check_bench FAIL: {f}")
         return 1
     print(f"check_bench: {len(flags)} identity flags true, paged "
-          "speculative above floor, pressure trace bounded")
+          "speculative above floor, pressure trace bounded, arrivals "
+          "trace completed within the TTFT ceiling")
     return 0
 
 
