@@ -79,6 +79,13 @@ merged under an "arrivals" key.  `tools/check_bench.py` gates completion,
 identity, and a bounded p99 TTFT.  Exits 1 on any divergence or lost
 request.
 
+``--trace PATH`` (arrivals mode only) re-runs the spec_dense combo with a
+live `repro.serving.telemetry.Tracer`, writes the Chrome trace to PATH,
+and merges a "telemetry" section: traced vs untraced tok/s and median
+per-iteration wall (the overhead_frac `tools/check_bench.py` gates at
+TELEMETRY_OVERHEAD_CEIL) plus a tokens_bit_identical flag proving the
+observation layer never perturbs the streams.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
         PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
         PYTHONPATH=src python benchmarks/engine_hotpath.py --kv paged
@@ -196,8 +203,18 @@ def main() -> int:
                          "dense/paged; gates streamed-token identity vs the "
                          "offline oracle and records queue-delay/TTFT/TPOT "
                          "p50/p99; merges an 'arrivals' section into --out")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="(with --arrivals) re-run the spec_dense combo "
+                         "under a live Tracer, write the Chrome trace to "
+                         "PATH, and merge a 'telemetry' section (traced vs "
+                         "untraced throughput + bit-identity) into --out")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
+
+    if args.trace is not None and args.arrivals is None:
+        print("--trace composes with --arrivals only (the telemetry A/B "
+              "rides the continuous-batching trace)")
+        return 2
 
     if sum((bool(args.mesh), args.kv == "paged", args.long_prompt,
             args.pressure, args.arrivals is not None)) > 1:
@@ -407,6 +424,7 @@ def main() -> int:
         section = {"rate": rate, "requests": n_req,
                    "arrival_span_iters": int(arrive[-1]), "modes": {}}
         all_ok = True
+        spec_dense_ref = None     # (kw, oracle streams, live streams, engine)
         for label, kw in combos:
             oracle = engine(**kw)
             for r in requests():
@@ -441,6 +459,8 @@ def main() -> int:
                 "tpot_s_p99": summ["tpot_s"]["p99"],
             }
             all_ok = all_ok and same and completed == n_req
+            if label == "spec_dense":
+                spec_dense_ref = (kw, want, live, eng)
             print(f"{label}: {completed}/{n_req} completed in "
                   f"{eng.iteration} iterations, ttft p50/p99 = "
                   f"{summ['ttft_iters']['p50']:.0f}/"
@@ -449,9 +469,71 @@ def main() -> int:
                   f"{summ['tpot_s']['p99'] * 1e3:.1f}ms, tokens identical: "
                   f"{same}")
 
+        # Telemetry overhead A/B: the SAME spec_dense arrival trace once
+        # more, now with a live Tracer (per-program timed_call blocks on
+        # every dispatch), against the untraced run already measured above.
+        # Identity proves observation never perturbs tokens; the median
+        # per-iteration wall ratio is the overhead check_bench gates.
+        telemetry = None
+        if args.trace is not None:
+            from repro.serving import Tracer, write_trace
+            kw, want_sd, live_sd, eng_un = spec_dense_ref
+            tracer = Tracer()
+            eng_tr = engine(tracer=tracer, **kw)
+            finals_tr = {}
+            for ev in eng_tr.serve(schedule()):
+                if ev.finished:
+                    finals_tr[ev.req_id] = ev.result
+            live_tr = {rid: res.tokens for rid, res in finals_tr.items()}
+            t_same = live_tr == want_sd and live_tr == live_sd
+            write_trace(tracer, args.trace, "chrome")
+
+            def decode_walls(e):
+                its = ([s for s in e.stats[2:] if s.new_tokens > 0]
+                       or [s for s in e.stats if s.new_tokens > 0])
+                walls = [s.wall_s for s in its]
+                return (sum(s.new_tokens for s in its)
+                        / max(sum(walls), 1e-9), statistics.median(walls))
+
+            un_tps, un_med = decode_walls(eng_un)
+            tr_tps, tr_med = decode_walls(eng_tr)
+            # Overhead estimator: both runs execute the SAME deterministic
+            # iteration sequence (identical tokens), so pair iterations by
+            # index and take the median of per-iteration wall RATIOS —
+            # workload variation cancels pairwise and a compile/GC spike in
+            # either run is a single outlier ratio the median discards
+            # (a ratio of unpaired medians flaked at ±7% on shared runners).
+            pairs = [(u.wall_s, t.wall_s)
+                     for u, t in zip(eng_un.stats[2:], eng_tr.stats[2:])
+                     if u.new_tokens > 0 and t.new_tokens > 0]
+            overhead = (statistics.median(t / u for u, t in pairs) - 1.0
+                        if pairs else tr_med / un_med - 1.0)
+            telemetry = {
+                "mode": "spec_dense",
+                "untraced_tok_per_s": un_tps,
+                "traced_tok_per_s": tr_tps,
+                "untraced_wall_s_per_iter_median": un_med,
+                "traced_wall_s_per_iter_median": tr_med,
+                "overhead_frac": overhead,
+                "tokens_bit_identical": t_same,
+                "events": tracer.emitted,
+                "events_dropped": tracer.dropped,
+                "program_keys": len(tracer.programs),
+                "trace_file": str(args.trace),
+            }
+            all_ok = all_ok and t_same
+            print(f"telemetry: {un_tps:.1f} tok/s untraced vs "
+                  f"{tr_tps:.1f} tok/s traced (median-wall overhead "
+                  f"{telemetry['overhead_frac']:+.1%}), {tracer.emitted} "
+                  f"events, {len(tracer.programs)} program keys, tokens "
+                  f"identical: {t_same}")
+            print(f"wrote {args.trace}")
+
         out = Path(args.out)
         results = json.loads(out.read_text()) if out.exists() else {}
         results["arrivals"] = section
+        if telemetry is not None:
+            results["telemetry"] = telemetry
         out.write_text(json.dumps(results, indent=2) + "\n")
         print(f"wrote {out}")
         if not all_ok:

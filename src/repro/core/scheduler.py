@@ -40,6 +40,10 @@ class SchedulerEvent:
     ai_estimate: float
     assignment: str
     rescheduled: bool
+    # the threshold the estimate was compared against — recorded per event
+    # so a trace shows the decision inputs, not just the verdict (and stays
+    # meaningful once alpha becomes a measured, time-varying quantity)
+    alpha: float = 0.0
 
 
 @dataclasses.dataclass
@@ -124,5 +128,5 @@ class PapiScheduler:
         self.events.append(SchedulerEvent(
             iteration=self.iteration, rlp=self.rlp, tlp=self.tlp,
             ai_estimate=self.ai_estimate, assignment=self._assignment,
-            rescheduled=rescheduled,
+            rescheduled=rescheduled, alpha=self.alpha,
         ))

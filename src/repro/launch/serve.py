@@ -105,6 +105,28 @@ def main() -> None:
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed of the fault schedule (a pure function of "
                          "(seed, iteration), so runs replay exactly)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the engine's typed event trace and write "
+                         "it to PATH on exit — iteration spans, scheduler "
+                         "decisions (AI estimate vs alpha), per-program "
+                         "timings by jit-cache key, preemptions/deferrals/"
+                         "faults, page-pool occupancy.  Summarize with "
+                         "tools/trace_report.py")
+    ap.add_argument("--trace-format", choices=("chrome", "jsonl"),
+                    default="chrome",
+                    help="trace serialization: 'chrome' opens in Perfetto / "
+                         "chrome://tracing (one lane per slot + scheduler + "
+                         "pool + programs), 'jsonl' is the raw typed events")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the papi_engine_* counters/gauges on exit "
+                         "(implies tracing even without --trace)")
+    ap.add_argument("--log-level", default=None,
+                    metavar="DEBUG|INFO|WARNING|ERROR",
+                    help="wire the 'repro.serving' logger to stderr at this "
+                         "level (deferral=DEBUG, preemption/unhappy "
+                         "finishes=INFO, degraded steps=WARNING, "
+                         "stalls=ERROR)")
     ap.add_argument("--arrivals", type=float, default=None, metavar="RATE",
                     help="continuous-batching mode: the trace arrives LIVE "
                          "as a seeded Poisson process (RATE requests per "
@@ -114,6 +136,12 @@ def main() -> None:
                          "per-request queue-delay/TTFT/TPOT and the "
                          "p50/p99 latency summary")
     args = ap.parse_args()
+
+    if args.log_level:
+        import logging
+        logging.basicConfig(
+            level=getattr(logging, args.log_level.upper()),
+            format="%(asctime)s %(levelname)-7s %(name)s: %(message)s")
 
     # Mesh sizing must happen before the first jax backend touch, hence the
     # deferred repro/jax imports below.
@@ -129,7 +157,9 @@ def main() -> None:
     from repro.core.traces import generate_trace
     from repro.launch.mesh import make_serving_mesh
     from repro.models import init_params
-    from repro.serving import PapiEngine, ServeRequest, parse_fault_specs
+    from repro.serving import (PapiEngine, ServeRequest, Tracer,
+                               export_prometheus, parse_fault_specs,
+                               write_trace)
 
     mesh = None
     if mesh_shape is not None:
@@ -151,6 +181,7 @@ def main() -> None:
         dcfg = get_config(args.draft_arch)
         draft = (dcfg, init_params(dcfg, jax.random.PRNGKey(args.seed + 1)))
 
+    tracer = (Tracer() if (args.trace or args.metrics_out) else None)
     eng = PapiEngine(
         cfg, params, max_slots=args.max_slots, cache_capacity=256,
         prefill_len=32, alpha=args.alpha, spec_len=args.spec_len,
@@ -158,6 +189,7 @@ def main() -> None:
         kv_layout=args.kv, page_size=args.page_size,
         max_blocks=args.max_blocks,
         faults=parse_fault_specs(args.fault, seed=args.fault_seed),
+        tracer=tracer,
     )
     rng = np.random.default_rng(args.seed)
     # Prompts are no longer clamped to the prefill window — admission chunks
@@ -243,6 +275,24 @@ def main() -> None:
     for s in eng.stats[:: max(len(eng.stats) // 20, 1)]:
         print(f"{s.iteration:5d} {s.rlp:4d} {s.tlp:3d} {s.ai_estimate:5.1f}  "
               f"{s.fc_variant:7s} {s.new_tokens:5d}")
+
+    if tracer is not None:
+        if args.trace:
+            write_trace(tracer, args.trace, args.trace_format)
+        if args.metrics_out:
+            from pathlib import Path
+            Path(args.metrics_out).write_text(export_prometheus(tracer))
+        c = tracer.counters
+        prog_s = sum(t.total_s for t in tracer.programs.values())
+        print(f"\ntelemetry: {tracer.emitted} events "
+              f"({tracer.dropped} dropped), {c.get('scheduler_flip', 0)} "
+              f"scheduler flips, {len(tracer.programs)} program keys "
+              f"({prog_s:.2f}s on device)"
+              + (f" -> {args.trace}" if args.trace else "")
+              + (f", metrics -> {args.metrics_out}"
+                 if args.metrics_out else ""))
+        if args.trace:
+            print(f"  summarize: python tools/trace_report.py {args.trace}")
 
 
 if __name__ == "__main__":

@@ -6,9 +6,15 @@ from repro.serving.kv_pages import (BlockTables, PageAllocator, PagedKVManager,
                                     PageStats)
 from repro.serving.metrics import latency_summary, percentile
 from repro.serving.sampler import greedy, sample
+from repro.serving.telemetry import (NULL_TRACER, Event, NullTracer,
+                                     ProgramTiming, Tracer, export_chrome,
+                                     export_jsonl, export_prometheus,
+                                     write_trace)
 
 __all__ = ["AllocatorInvariantError", "BlockTables", "EngineStallError",
-           "FaultInjector", "IterStats", "PageAllocator", "PagedKVManager",
-           "PageStats", "PapiEngine", "ServeRequest", "ServeResult",
-           "TokenEvent", "greedy", "latency_summary", "parse_fault_specs",
-           "percentile", "sample"]
+           "Event", "FaultInjector", "IterStats", "NULL_TRACER",
+           "NullTracer", "PageAllocator", "PagedKVManager", "PageStats",
+           "PapiEngine", "ProgramTiming", "ServeRequest", "ServeResult",
+           "TokenEvent", "Tracer", "export_chrome", "export_jsonl",
+           "export_prometheus", "greedy", "latency_summary",
+           "parse_fault_specs", "percentile", "sample", "write_trace"]

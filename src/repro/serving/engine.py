@@ -170,6 +170,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
 import time
 from functools import partial
 from typing import Any, Sequence
@@ -190,6 +191,13 @@ from repro.models.linear import current_fc_interpret, current_fc_variant, fc_var
 from repro.serving.faults import FAULT_INF, FAULT_NAN, FAULT_NONE, FaultInjector
 from repro.serving.kv_pages import PagedKVManager
 from repro.serving.sampler import accept_speculative, greedy
+from repro.serving.telemetry import NULL_TRACER, Tracer
+
+# the serving subsystem's logger: deferral (DEBUG), preemption / unhappy
+# finishes (INFO), degraded re-runs (WARNING), stalls (ERROR).  Unconfigured
+# it propagates to the root handler-less logger, i.e. stays silent —
+# `launch.serve --log-level` wires basicConfig for the CLI.
+log = logging.getLogger("repro.serving")
 
 
 @dataclasses.dataclass
@@ -351,6 +359,7 @@ class PapiEngine:
         preempt_watermark: float | None = None,
         stall_limit: int | None = 256,
         debug_invariants: bool = False,
+        tracer: Tracer | None = None,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
         assert kv_layout in ("dense", "paged"), kv_layout
@@ -377,6 +386,10 @@ class PapiEngine:
                                         or kv_layout == "paged")
                             if mesh is not None else None))
         self.attn_pim = attn_pim
+        # telemetry: NULL_TRACER's hooks are no-ops and its timed_call is a
+        # bare dispatch, so the traced-off hot path is unchanged (gated by
+        # the traced-vs-untraced A/B in benchmarks/engine_hotpath.py)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.scheduler = PapiScheduler(cfg, alpha=alpha, tlp=spec_len,
                                        eos_token=eos_token)
         self.scheduler.initial_schedule(0, spec_len)
@@ -397,6 +410,12 @@ class PapiEngine:
             self.kv = PagedKVManager(num_pages=num_pages, page_size=page_size,
                                      max_slots=max_slots,
                                      max_blocks=max_blocks)
+            # per-call allocator events (map/unmap/reserve) are the highest-
+            # volume kind: attached only when debugging invariants or when
+            # the tracer opted in explicitly
+            if self.tracer.enabled and (debug_invariants
+                                        or self.tracer.page_events):
+                self.kv.tracer = self.tracer
             self.cache = init_paged_cache(cfg, max_slots, num_pages,
                                           page_size, self.kv.max_blocks)
         else:
@@ -495,6 +514,10 @@ class PapiEngine:
         self.queue.append(req)
         self._submit_t.setdefault(req.req_id, self._now())
         self.submit_iteration.setdefault(req.req_id, self.iteration)
+        if self.tracer.enabled:
+            self.tracer.emit("submit", self.iteration, req_id=req.req_id,
+                             prompt_len=len(req.prompt),
+                             max_new=req.max_new_tokens)
 
     @property
     def active_slots(self) -> list[int]:
@@ -685,6 +708,18 @@ class PapiEngine:
         return (kind, tlp, self.scheduler.fc_assignment, self.pim_interpret,
                 self.attn_pim)
 
+    def _call(self, key: tuple, fn, *args):
+        """Dispatch one compiled program.  Every `_get_*` getter returns its
+        jit-cache key alongside the executable so the dispatch can be timed
+        under THAT key — the per-variant timing table is exactly what a
+        measured-characterization scheduler consumes (ROADMAP).  Under an
+        enabled tracer the wall time is measured around
+        `jax.block_until_ready`; untraced this is the bare call (no block:
+        async dispatch is preserved)."""
+        if self.tracer.enabled:
+            return self.tracer.timed_call(key, fn, *args)
+        return fn(*args)
+
     def _get_decode(self, which: str):
         """Legacy (unfused) per-call decode step."""
         tlp = 1 if which == "draft" else (self.spec_len if which == "verify" else 1)
@@ -693,7 +728,7 @@ class PapiEngine:
             cfg = self.draft_cfg if which == "draft" else self.cfg
             fn = partial(decode_step, cfg)
             self._decode_jit[key] = jax.jit(fn)
-        return self._decode_jit[key]
+        return key, self._decode_jit[key]
 
     def _get_plain_fused(self):
         """Fused plain decode: decode_step + greedy in one device program, so
@@ -710,7 +745,7 @@ class PapiEngine:
                 return greedy(logits[:, -1]), bad, cache
 
             self._decode_jit[key] = jax.jit(plain_step)
-        return self._decode_jit[key]
+        return key, self._decode_jit[key]
 
     def _get_spec_fused(self):
         """Fused speculative iteration: the k-step draft loop is a
@@ -758,7 +793,7 @@ class PapiEngine:
                 return out, accepted, finished_eos, bad, cache, draft_cache
 
             self._decode_jit[key] = jax.jit(spec_step)
-        return self._decode_jit[key]
+        return key, self._decode_jit[key]
 
     def _get_oracle(self, which: str):
         """Degraded-mode decode step: the tested XLA-attention / plain-FC
@@ -769,7 +804,7 @@ class PapiEngine:
         if key not in self._decode_jit:
             cfg = self.draft_cfg if which == "draft" else self.cfg
             self._decode_jit[key] = jax.jit(partial(decode_step, cfg))
-        return self._decode_jit[key]
+        return key, self._decode_jit[key]
 
     def _fault_code(self):
         """Per-iteration logits-fault code, passed as a TRACED int32 scalar
@@ -778,8 +813,11 @@ class PapiEngine:
         faults only apply to the fused programs."""
         if self.faults is None or not self.fused:
             return jnp.asarray(FAULT_NONE, jnp.int32)
-        return jnp.asarray(self.faults.logits_fault(self.iteration),
-                           jnp.int32)
+        code = self.faults.logits_fault(self.iteration)
+        if code != FAULT_NONE and self.tracer.enabled:
+            self.tracer.emit("fault", self.iteration,
+                             fault="nan" if code == FAULT_NAN else "inf")
+        return jnp.asarray(code, jnp.int32)
 
     def _degraded_step(self):
         """Re-run a poisoned iteration on the oracle path: XLA attention,
@@ -791,13 +829,20 @@ class PapiEngine:
         next (healthy) speculative iteration."""
         self.degraded_steps += 1
         self._degraded_this_step = True
+        if self.tracer.enabled:
+            self.tracer.emit("degraded", self.iteration, mode="step")
+        log.warning("non-finite logits at iteration %d: re-running the "
+                    "step on the oracle path", self.iteration)
         last = jnp.asarray(self.slot_last)
         with attn_impl("xla"), fc_variant("pu"):
-            logits, self.cache = self._get_oracle("main")(
-                self.params, self.cache, last[:, None])
+            okey, ofn = self._get_oracle("main")
+            logits, self.cache = self._call(
+                okey, ofn, self.params, self.cache, last[:, None])
             if self.spec_len > 1 and self.draft_cfg is not None:
-                _, self.draft_cache = self._get_oracle("draft")(
-                    self.draft_params, self.draft_cache, last[:, None])
+                dkey, dfn = self._get_oracle("draft")
+                _, self.draft_cache = self._call(
+                    dkey, dfn, self.draft_params, self.draft_cache,
+                    last[:, None])
             nxt_h = self._fetch(greedy(logits[:, -1]))
         return (np.asarray(nxt_h)[:, None].astype(np.int32),
                 np.ones(self.max_slots), None)
@@ -814,7 +859,7 @@ class PapiEngine:
         if key not in self._prefill_jit:
             fn = prefill_to_pages if self.kv is not None else prefill_to_slots
             self._prefill_jit[key] = jax.jit(partial(fn, cfg))
-        return self._prefill_jit[key]
+        return key, self._prefill_jit[key]
 
     def _get_chunk(self, which: str):
         """Chunked-prefill continuation step (`models.prefill_chunk`): one
@@ -826,7 +871,7 @@ class PapiEngine:
                current_fc_interpret(), self.attn_pim)
         if key not in self._prefill_jit:
             self._prefill_jit[key] = jax.jit(partial(prefill_chunk, cfg))
-        return self._prefill_jit[key]
+        return key, self._prefill_jit[key]
 
     # --------------------------------------- continuous batching (serve())
     def _get_wave(self, which: str):
@@ -854,7 +899,7 @@ class PapiEngine:
                                           pin_mask, pin_pos)
                     return cache
             self._prefill_jit[key] = jax.jit(wave)
-        return self._prefill_jit[key]
+        return key, self._prefill_jit[key]
 
     def _get_oracle_wave(self):
         """Degraded-mode wave: the XLA-attention / plain-FC oracle, never
@@ -870,7 +915,7 @@ class PapiEngine:
                 return greedy(logits), cache
 
             self._prefill_jit[key] = jax.jit(wave)
-        return self._prefill_jit[key]
+        return key, self._prefill_jit[key]
 
     def _prefilling_slots(self) -> list[int]:
         """Slots mid-chunked-prefill (serve() only: offline admission always
@@ -923,7 +968,7 @@ class PapiEngine:
             self.slot_last[s] = tok
             if tok == self.eos_token or self.slot_budget[s] <= 1:
                 reason = "eos" if tok == self.eos_token else "length"
-                self._emit(req, [tok], reason)
+                self._emit(req, [tok], reason, slot=s)
                 self.slot_req[s] = None
                 self.slot_tokens[s] = []
                 self.slot_last[s] = 0
@@ -953,13 +998,16 @@ class PapiEngine:
         ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
         pm, pp = jnp.asarray(pin), jnp.asarray(pin_pos)
         with self._scope(), self._attn_scope():
-            nxt, bad, cache2 = self._get_wave("main")(
-                self.params, self.cache, ct, cl, pm, pp,
+            wkey, wfn = self._get_wave("main")
+            nxt, bad, cache2 = self._call(
+                wkey, wfn, self.params, self.cache, ct, cl, pm, pp,
                 jnp.asarray(FAULT_NONE, jnp.int32))
             self.cache = cache2
             if self.draft_cfg is not None:
-                self.draft_cache = self._get_wave("draft")(
-                    self.draft_params, self.draft_cache, ct, cl, pm, pp)
+                dkey, dfn = self._get_wave("draft")
+                self.draft_cache = self._call(
+                    dkey, dfn, self.draft_params, self.draft_cache,
+                    ct, cl, pm, pp)
         for s in prefilling:
             self.slot_offset[s] += int(clens[s])
         if finals:
@@ -989,13 +1037,16 @@ class PapiEngine:
         with self._scope(), \
                 fc_variant(variant, interpret=self.pim_interpret), \
                 self._attn_scope():
-            nxt, bad, cache2 = self._get_wave("main")(
-                self.params, self.cache, ct, cl, pm, pp, self._fault_code())
+            wkey, wfn = self._get_wave("main")
+            nxt, bad, cache2 = self._call(
+                wkey, wfn, self.params, self.cache, ct, cl, pm, pp,
+                self._fault_code())
             if self.draft_cfg is not None and prefilling:
                 # the draft's KV covers the prompt positions (chunk rows
                 # only — the TLP=1 decode path never advances the draft)
-                self.draft_cache = self._get_wave("draft")(
-                    self.draft_params, self.draft_cache, ct,
+                dkey, dfn = self._get_wave("draft")
+                self.draft_cache = self._call(
+                    dkey, dfn, self.draft_params, self.draft_cache, ct,
                     jnp.asarray(chunk_lens), pm, pp)
             nxt_h, bad_h = self._fetch(nxt, bad)
             if bad_h:
@@ -1016,9 +1067,14 @@ class PapiEngine:
         `_degraded_step`): XLA attention, plain-PU FC, never injected."""
         self.degraded_steps += 1
         self._degraded_this_step = True
+        if self.tracer.enabled:
+            self.tracer.emit("degraded", self.iteration, mode="wave")
+        log.warning("non-finite logits at iteration %d: re-running the "
+                    "mixed wave on the oracle path", self.iteration)
         with attn_impl("xla"), fc_variant("pu"):
-            nxt, self.cache = self._get_oracle_wave()(
-                self.params, self.cache, ct, cl, pm, pp)
+            okey, ofn = self._get_oracle_wave()
+            nxt, self.cache = self._call(
+                okey, ofn, self.params, self.cache, ct, cl, pm, pp)
             return np.asarray(self._fetch(nxt))
 
     def _admit(self) -> int:
@@ -1036,6 +1092,9 @@ class PapiEngine:
             # (queue order kept) and the deferral-age / preemption /
             # watchdog machinery sees it like genuine pool pressure
             self._deferred_head = self.queue[0].req_id
+            if self.tracer.enabled:
+                self.tracer.emit("fault", self.iteration, fault="admit",
+                                 req_id=self._deferred_head)
             return 0
         admitted = 0
         while True:
@@ -1058,8 +1117,12 @@ class PapiEngine:
         setdefault — a preempted request's re-admission produces a
         CONTINUATION token through the same code path, and the original
         first-token stamp must survive it."""
-        self._first_tok_t.setdefault(req_id, self._now())
-        self.first_token_iteration.setdefault(req_id, self.iteration)
+        if req_id not in self._first_tok_t:
+            self._first_tok_t[req_id] = self._now()
+            self.first_token_iteration.setdefault(req_id, self.iteration)
+            if self.tracer.enabled:
+                self.tracer.emit("first_token", self.iteration,
+                                 req_id=req_id)
 
     def _latency_fields(self, req_id: int, n_tokens: int) -> dict:
         """Per-request latency bundle for the ServeResult (see
@@ -1075,7 +1138,10 @@ class PapiEngine:
             queue_delay_s=(ta - t0) if (t0 is not None and ta is not None)
             else None,
             ttft_s=(tf - t0) if (t0 is not None and tf is not None) else None,
-            tpot_s=(((now - tf) / (n_tokens - 1)) if n_tokens > 1 else 0.0)
+            # no inter-token gap exists below 2 tokens: None (excluded from
+            # the summary, which counts contributors per metric), not a
+            # fake 0.0 dragging the percentiles down
+            tpot_s=(((now - tf) / (n_tokens - 1)) if n_tokens > 1 else None)
             if tf is not None else None,
             queue_delay_iters=(ia - i0)
             if (i0 is not None and ia is not None) else None,
@@ -1083,7 +1149,8 @@ class PapiEngine:
             if (i0 is not None and i_f is not None) else None,
         )
 
-    def _emit(self, req, tokens: Sequence[int], reason: str) -> None:
+    def _emit(self, req, tokens: Sequence[int], reason: str,
+              slot: int | None = None) -> None:
         """Append the caller-visible result for `req`.  A preempted request
         re-entered admission as a `_ResumedRequest` whose prompt carries its
         own earlier output — reassemble the original stream here."""
@@ -1094,11 +1161,19 @@ class PapiEngine:
         self.results.append(ServeResult(
             req.req_id, toks, plen, self.iteration, reason,
             **self._latency_fields(req.req_id, len(toks))))
+        if self.tracer.enabled:
+            self.tracer.emit("finish", self.iteration, req_id=req.req_id,
+                             reason=reason, tokens=len(toks), slot=slot)
+        if reason not in ("eos", "length"):
+            # unhappy finishes (timeout / cancelled / rejected / aborted)
+            # are operational signals, not errors — INFO
+            log.info("request %d finished: %s (%d tokens)",
+                     req.req_id, reason, len(toks))
 
     def _finish_slot(self, s: int, reason: str) -> None:
         """Finish live slot `s` outside the normal eos/length path (timeout,
         cancel, abort): emit tokens-so-far and drain the slot's pages."""
-        self._emit(self.slot_req[s], self.slot_tokens[s], reason)
+        self._emit(self.slot_req[s], self.slot_tokens[s], reason, slot=s)
         self.slot_req[s] = None
         self.slot_tokens[s] = []
         self.slot_last[s] = 0
@@ -1177,6 +1252,12 @@ class PapiEngine:
             self.kv.release(victim)
         self.preemptions += 1
         self.preempted_ids.add(req.req_id)
+        if self.tracer.enabled:
+            self.tracer.emit("preempt", self.iteration, req_id=req.req_id,
+                             slot=victim, done=len(done))
+        log.info("preempted request %d from slot %d (%d tokens done, "
+                 "deferral age %d)", req.req_id, victim, len(done),
+                 self._defer_age)
         return True
 
     def _snapshot(self) -> dict:
@@ -1207,6 +1288,13 @@ class PapiEngine:
                 and (self.queue or self.active_slots)
                 and self._stalled >= self.stall_limit):
             snap = self._snapshot()
+            # the snapshot rides the trace too, so a post-mortem does not
+            # depend on the exception propagating to something that logs it
+            if self.tracer.enabled:
+                self.tracer.emit("stall", self.iteration, snapshot=snap)
+            log.error("engine stalled for %d iterations at iteration %d "
+                      "(queue=%s)", self._stalled, self.iteration,
+                      snap["queue"])
             raise EngineStallError(
                 f"engine made no progress for {self._stalled} consecutive "
                 f"iterations at iteration {self.iteration} "
@@ -1231,6 +1319,9 @@ class PapiEngine:
         self.slot_seq[slot] = self._admit_seq
         self.admit_iteration.setdefault(req.req_id, self.iteration)
         self._admit_t.setdefault(req.req_id, self._now())
+        if self.tracer.enabled:
+            self.tracer.emit("admit", self.iteration, req_id=req.req_id,
+                             slot=slot, prompt_len=len(req.prompt))
 
     def _admit_wave(self) -> tuple[int, bool]:
         free = [i for i, r in enumerate(self.slot_req) if r is None]
@@ -1313,11 +1404,14 @@ class PapiEngine:
         src_dev = jnp.asarray(src)
         self._sync_tables()   # paged: admitted rows just mapped their pages
         with self._scope(), self._attn_scope():
-            first, self.cache = self._get_prefill("main")(
-                self.params, batch, self.cache, src_dev)
+            pkey, pfn = self._get_prefill("main")
+            first, self.cache = self._call(
+                pkey, pfn, self.params, batch, self.cache, src_dev)
             if self.draft_cfg is not None:
-                _, self.draft_cache = self._get_prefill("draft")(
-                    self.draft_params, batch, self.draft_cache, src_dev)
+                dkey, dfn = self._get_prefill("draft")
+                _, self.draft_cache = self._call(
+                    dkey, dfn, self.draft_params, batch, self.draft_cache,
+                    src_dev)
         admitted = 0
         if self.stream_chunks:
             # ---- continuous batching: a prompt longer than the window does
@@ -1365,12 +1459,15 @@ class PapiEngine:
                         del pending[slot]
                 ct, cl = jnp.asarray(ctoks), jnp.asarray(clens)
                 with self._scope(), self._attn_scope():
-                    nxt, self.cache = self._get_chunk("main")(
-                        self.params, self.cache, ct, cl)
+                    ckey, cfn = self._get_chunk("main")
+                    nxt, self.cache = self._call(
+                        ckey, cfn, self.params, self.cache, ct, cl)
                     if self.draft_cfg is not None:
                         # the draft's KV must cover the same prompt positions
-                        _, self.draft_cache = self._get_chunk("draft")(
-                            self.draft_params, self.draft_cache, ct, cl)
+                        dkey, dfn = self._get_chunk("draft")
+                        _, self.draft_cache = self._call(
+                            dkey, dfn, self.draft_params, self.draft_cache,
+                            ct, cl)
                 if final:
                     wave_finals.append((nxt, final))
             got = self._fetch(first, *(nxt for nxt, _ in wave_finals))
@@ -1392,7 +1489,7 @@ class PapiEngine:
             # prefill already produced the first output token
             if tok == self.eos_token or self.slot_budget[slot] <= 1:
                 reason = "eos" if tok == self.eos_token else "length"
-                self._emit(req, [tok], reason)
+                self._emit(req, [tok], reason, slot=slot)
                 self.slot_last[slot] = 0   # slot stays available
                 if self.kv is not None:
                     self.kv.release(slot)
@@ -1413,8 +1510,10 @@ class PapiEngine:
             if tlp <= 1 or self.draft_cfg is None:
                 last = jnp.asarray(self.slot_last)
                 if self.fused:
-                    nxt, bad, cache2 = self._get_plain_fused()(
-                        self.params, self.cache, last, self._fault_code())
+                    fkey, ffn = self._get_plain_fused()
+                    nxt, bad, cache2 = self._call(
+                        fkey, ffn, self.params, self.cache, last,
+                        self._fault_code())
                     nxt_h, bad_h = self._fetch(nxt, bad)
                     if bad_h:
                         # non-finite logits: drop the poisoned step (the
@@ -1423,8 +1522,9 @@ class PapiEngine:
                         return self._degraded_step()
                     self.cache = cache2
                 else:
-                    logits, self.cache = self._get_decode("plain")(
-                        self.params, self.cache, last[:, None])
+                    pkey, pfn = self._get_decode("plain")
+                    logits, self.cache = self._call(
+                        pkey, pfn, self.params, self.cache, last[:, None])
                     nxt_h = self._fetch(greedy(logits[:, -1]))
                 return (np.asarray(nxt_h)[:, None].astype(np.int32),
                         np.ones(self.max_slots), None)
@@ -1434,10 +1534,10 @@ class PapiEngine:
 
     def _speculative_iteration_fused(self):
         """Device-resident draft/verify/accept: one transfer per iteration."""
-        fn = self._get_spec_fused()
-        out, accepted, fin, bad, cache, draft_cache = fn(
-            self.params, self.draft_params, self.cache, self.draft_cache,
-            jnp.asarray(self.slot_last), self._fault_code(),
+        key, fn = self._get_spec_fused()
+        out, accepted, fin, bad, cache, draft_cache = self._call(
+            key, fn, self.params, self.draft_params, self.cache,
+            self.draft_cache, jnp.asarray(self.slot_last), self._fault_code(),
         )
         out_h, acc_h, fin_h, bad_h = self._fetch(out, accepted, fin, bad)
         if bad_h:
@@ -1453,14 +1553,15 @@ class PapiEngine:
         """The seed's per-step host loop — the reference implementation the
         fused path is validated against (and the benchmark's baseline)."""
         k = self.spec_len
-        draft_fn = self._get_decode("draft")
+        draft_key, draft_fn = self._get_decode("draft")
         # 1) draft proposes k-1 tokens autoregressively (k steps: the extra
         # step writes KV for the window's final token)
         proposals = [self.slot_last.copy()]
         last = jnp.asarray(self.slot_last[:, None])
         for _ in range(k):
-            logits, self.draft_cache = draft_fn(
-                self.draft_params, self.draft_cache, last
+            logits, self.draft_cache = self._call(
+                draft_key, draft_fn, self.draft_params, self.draft_cache,
+                last
             )
             nxt = greedy(logits[:, -1])
             proposals.append(np.asarray(self._fetch(nxt)))
@@ -1468,8 +1569,9 @@ class PapiEngine:
         window = np.stack(proposals[:k], axis=1)          # [slots, k]
 
         # 2) target verifies the window in ONE decode step (TLP = k)
-        logits, self.cache = self._get_decode("verify")(
-            self.params, self.cache, jnp.asarray(window)
+        vkey, vfn = self._get_decode("verify")
+        logits, self.cache = self._call(
+            vkey, vfn, self.params, self.cache, jnp.asarray(window)
         )
         target = np.asarray(self._fetch(greedy(logits)))  # [slots, k]
 
@@ -1498,9 +1600,16 @@ class PapiEngine:
         results0 = len(self.results)
         preempted0 = self.preemptions
         self._degraded_this_step = False
+        if self.tracer.enabled:
+            # events emitted anywhere below (including by the page manager,
+            # which doesn't know the iteration) default to this step index
+            self.tracer.iteration = self.iteration
         if self.faults is not None:
             delay = self.faults.step_delay(self.iteration)
             if delay > 0:
+                if self.tracer.enabled:
+                    self.tracer.emit("fault", self.iteration,
+                                     fault="latency", delay_s=delay)
                 time.sleep(delay)
         self._expire_deadlines()
         admitted = self._admit()
@@ -1516,6 +1625,13 @@ class PapiEngine:
             self._defer_age = 1
         else:
             self._defer_age += 1
+        if self._deferred_head is not None:
+            if self.tracer.enabled:
+                self.tracer.emit("defer", self.iteration,
+                                 req_id=self._deferred_head,
+                                 age=self._defer_age)
+            log.debug("queue head %d deferred by the pool (age %d)",
+                      self._deferred_head, self._defer_age)
         if self._defer_age and self._should_preempt() and self._preempt_one():
             # pages freed — retry admission immediately so the head's
             # admission delay is bounded by K, not K + another deferral
@@ -1530,10 +1646,21 @@ class PapiEngine:
             # guard — paged admission deferring with nothing active would
             # spin this loop forever (regression-tested).
             self.scheduler.observe_counts(0, admitted)
+            if self.tracer.enabled:
+                self._trace_scheduler()
             self.iteration += 1
             self._watchdog(admitted > 0 or len(self.results) > results0
                            or self.preemptions > preempted0)
             self._check_invariants()
+            if self.tracer.enabled:
+                self.tracer.span(
+                    "iteration", t0,
+                    fc_variant=self.scheduler.fc_assignment,
+                    rlp=self.scheduler.rlp, tlp=self.scheduler.tlp,
+                    ai_estimate=self.scheduler.ai_estimate, new_tokens=0,
+                    degraded=0, decode_slots=0, prefill_slots=0,
+                    queued=len(self.queue), arrivals=arrived,
+                    transfers=self.host_transfers - transfers0, idle=True)
             return
 
         speculating = self.spec_len > 1 and self.draft_cfg is not None
@@ -1591,7 +1718,7 @@ class PapiEngine:
                     len(self.slot_tokens[s]) >= self.slot_budget[s]
                 ):
                     reason = "eos" if tok == self.eos_token else "length"
-                    self._emit(req, self.slot_tokens[s], reason)
+                    self._emit(req, self.slot_tokens[s], reason, slot=s)
                     self.slot_req[s] = None
                     finished_flags[s] = True
                     break
@@ -1627,6 +1754,8 @@ class PapiEngine:
         # 4) the PAPI runtime scheduling step (§5.2.2): the per-slot finished
         # flags go to the scheduler as an array — it sums them itself.
         self.scheduler.observe_counts(finished_flags, admitted)
+        if self.tracer.enabled:
+            self._trace_scheduler()
         self.iteration += 1
         self._watchdog(admitted > 0 or len(iter_tokens) > 0 or chunked > 0
                        or len(self.results) > results0
@@ -1664,6 +1793,29 @@ class PapiEngine:
             prefill_slots=chunked,
             decode_slots=len(decoding),
         ))
+        if self.tracer.enabled:
+            if self.kv is not None:
+                self.tracer.emit("pool", used=kv_used, free=kv_free,
+                                 watermark=kv_peak, fragmentation=kv_frag)
+            st = self.stats[-1]
+            self.tracer.span(
+                "iteration", t0, fc_variant=st.fc_variant, rlp=st.rlp,
+                tlp=st.tlp, ai_estimate=st.ai_estimate,
+                new_tokens=st.new_tokens, degraded=st.degraded,
+                decode_slots=st.decode_slots,
+                prefill_slots=st.prefill_slots, queued=st.queued,
+                arrivals=st.arrivals, transfers=st.transfers)
+
+    def _trace_scheduler(self) -> None:
+        """Emit this iteration's scheduling decision with its INPUTS (the
+        AI estimate and the alpha threshold it was compared against), not
+        just the chosen variant — the flip timeline in a trace must show
+        why each decision went the way it did."""
+        ev = self.scheduler.events[-1]
+        self.tracer.emit("scheduler", self.iteration,
+                         ai_estimate=ev.ai_estimate, alpha=ev.alpha,
+                         assignment=ev.assignment, flipped=ev.rescheduled,
+                         rlp=ev.rlp, tlp=ev.tlp)
 
     def set_spec_len(self, tlp: int) -> None:
         """Host updates the TLP register (dynamic speculation length).

@@ -292,6 +292,11 @@ class PagedKVManager:
         assert usable >= 1, f"num_pages={num_pages} leaves no usable page"
         if max_blocks is None:
             max_blocks = usable
+        # optional telemetry sink: the engine attaches its Tracer here
+        # (under debug_invariants or an opted-in tracer — per-call page
+        # events are the trace's highest-volume kind) and every map/unmap/
+        # reserve below emits a typed event.  None = zero-cost.
+        self.tracer = None
         self.page_size = int(page_size)
         # a table wider than the pool would let admission accept a budget
         # the allocator can never satisfy even when fully drained — the
@@ -315,9 +320,13 @@ class PagedKVManager:
 
     def admit(self, slot: int, budget_tokens: int,
               initial_tokens: int) -> None:
-        pages = self.alloc.admit(slot, self.pages_for(budget_tokens),
+        budget = self.pages_for(budget_tokens)
+        pages = self.alloc.admit(slot, budget,
                                  self.pages_for(initial_tokens))
         self.tables.set_row(slot, pages)
+        if self.tracer is not None:
+            self.tracer.emit("page_reserve", slot=slot, budget_pages=budget,
+                             mapped_pages=len(pages))
 
     def coverage(self, slot: int) -> int:
         """Tokens the slot's mapped pages can hold right now.  Under the
@@ -336,6 +345,8 @@ class PagedKVManager:
             return 0
         self.alloc.grow(slot, need - have)
         self.tables.set_row(slot, self.alloc.pages_of(slot))
+        if self.tracer is not None:
+            self.tracer.emit("page_map", slot=slot, pages=need - have)
         return need - have
 
     def rewind(self, slot: int, tokens: int) -> int:
@@ -344,6 +355,9 @@ class PagedKVManager:
         freed = self.alloc.rewind(slot, self.pages_for(tokens))
         if freed:
             self.tables.set_row(slot, self.alloc.pages_of(slot))
+            if self.tracer is not None:
+                self.tracer.emit("page_unmap", slot=slot, pages=len(freed),
+                                 cause="rewind")
         return len(freed)
 
     def release(self, slot: int) -> int:
@@ -356,6 +370,9 @@ class PagedKVManager:
         aliasing."""
         freed = self.alloc.finish(slot)
         self.tables.clear_row(slot)
+        if self.tracer is not None and freed:
+            self.tracer.emit("page_unmap", slot=slot, pages=len(freed),
+                             cause="release")
         return len(freed)
 
     def stats(self, used_tokens: int = 0) -> PageStats:

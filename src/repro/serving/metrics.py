@@ -49,7 +49,10 @@ def latency_summary(results: Iterable) -> dict:
     attributes (normally `ServeResult`s from a serve() run).  Requests
     that never produced a token (cancelled/rejected before TTFT) carry
     ``ttft_s/tpot_s`` of None and are excluded from those metrics rather
-    than dragging the percentiles to zero.
+    than dragging the percentiles to zero — likewise single-token requests
+    from ``tpot_s`` (no inter-token gap exists; the engine stamps those
+    None).  Each metric therefore carries its own ``count`` of
+    contributing requests; the top-level ``n`` is the request total.
     """
     results = list(results)
     out: dict = {"n": len(results)}
@@ -60,5 +63,6 @@ def latency_summary(results: Iterable) -> dict:
             "p50": percentile(vals, 50),
             "p99": percentile(vals, 99),
             "mean": (sum(vals) / len(vals)) if vals else 0.0,
+            "count": len(vals),
         }
     return out

@@ -1,0 +1,399 @@
+"""Engine telemetry layer (src/repro/serving/telemetry.py):
+
+  * the `Tracer` ring keeps the NEWEST events and counts what it dropped;
+    aggregate counters stay exact under truncation;
+  * a traced engine run emits only vocabulary kinds, with non-decreasing
+    iteration stamps, and `tools/trace_report.py`'s mirrored vocabulary
+    stays in sync with `telemetry.EVENT_KINDS`;
+  * the chrome export survives a json round trip with valid ph/ts/pid and
+    carries the aggregate tables under "papi"; the Prometheus snapshot is
+    line-parseable text exposition;
+  * the per-program timing table is hand-countable on a single greedy
+    request (1 prefill dispatch + max_new-1 decode dispatches);
+  * tracing is observation only: serve() token streams are BIT-IDENTICAL
+    traced vs untraced, and the NullTracer default keeps every hook a
+    no-op;
+  * scheduler events carry the AI estimate AND the alpha threshold, flips
+    match `num_reschedules`; degraded/fault events match the engine's own
+    counts on a spec+paged+faults run; a watchdog stall lands a final
+    `stall` event before EngineStallError propagates;
+  * page map/unmap/reserve events balance to zero on a drained pool;
+  * `latency_summary` reports per-metric sample counts and tpot_s only
+    over requests with >= 2 tokens.
+"""
+import json
+import re
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (EngineStallError, FaultInjector, PapiEngine,
+                           ServeRequest, Tracer, export_chrome, export_jsonl,
+                           export_prometheus, latency_summary, write_trace)
+from repro.serving.telemetry import (EVENT_KINDS, NULL_TRACER,
+                                     format_program_key)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+import trace_report  # noqa: E402  (tools/ is not a package)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def draft_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(9))
+
+
+NO_EOS = get_config("qwen2-0.5b").reduced().vocab_size - 1
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_slots=4, cache_capacity=64, prefill_len=8,
+                    alpha=6.0, eos_token=NO_EOS, fused=True,
+                    debug_invariants=True)
+    defaults.update(kw)
+    return PapiEngine(cfg, params, **defaults)
+
+
+def _submit_all(eng, n=3, max_new=6):
+    for i in range(n):
+        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=max_new))
+
+
+# ------------------------------------------------------------- ring buffer
+
+def test_ring_truncation_keeps_newest_and_counts_dropped():
+    tr = Tracer(capacity=10)
+    for i in range(25):
+        tr.emit("submit", iteration=i, req_id=i, prompt_len=3, max_new=4)
+    events = list(tr.events)
+    assert len(events) == 10
+    assert tr.emitted == 25
+    assert tr.dropped == 15
+    # newest-wins: the ring holds exactly the last ten submissions
+    assert [ev.data["req_id"] for ev in events] == list(range(15, 25))
+    # aggregates are maintained OUTSIDE the ring: exact despite truncation
+    assert tr.counters["submit"] == 25
+
+
+def test_null_tracer_is_inert():
+    calls = []
+    assert NULL_TRACER.emit("finish", req_id=0) is None
+    assert NULL_TRACER.span("iteration", 0.0) is None
+    out = NULL_TRACER.timed_call(("k",), lambda x: calls.append(x) or x, 7)
+    assert out == 7 and calls == [7]      # bare dispatch, no block/record
+    assert NULL_TRACER.program_table() == {}
+    assert not NULL_TRACER.enabled
+    assert list(NULL_TRACER.events) == []
+
+
+# ------------------------------------------------- traced engine: vocabulary
+
+def test_traced_run_vocabulary_and_iteration_order(small_model):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr)
+    _submit_all(eng)
+    eng.run(max_iterations=60)
+    events = list(tr.events)
+    assert events, "traced run emitted nothing"
+    assert {ev.kind for ev in events} <= EVENT_KINDS
+    iters = [ev.iteration for ev in events]
+    assert iters == sorted(iters), "iteration stamps must be non-decreasing"
+    # one scheduler decision and one iteration span per engine step
+    assert tr.counters["scheduler"] == eng.iteration
+    assert tr.counters["iteration"] == eng.iteration
+    assert tr.counters["tokens"] == sum(s.new_tokens for s in eng.stats)
+    assert tr.counters["finish:length"] == 3
+
+
+def test_event_kinds_mirror_stays_in_sync():
+    """tools/trace_report.py is stdlib-only so it keeps its OWN copy of the
+    vocabulary — this is the assertion that keeps the two equal."""
+    assert trace_report.EVENT_KINDS == EVENT_KINDS
+
+
+# ---------------------------------------------------------------- exporters
+
+def test_chrome_export_round_trip(small_model, tmp_path):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr)
+    _submit_all(eng)
+    eng.run(max_iterations=60)
+    path = tmp_path / "t.trace.json"
+    write_trace(tr, path, "chrome")
+    doc = json.loads(path.read_text())
+    assert "traceEvents" in doc and doc["traceEvents"]
+    for rec in doc["traceEvents"]:
+        assert rec["ph"] in ("M", "X", "i", "C")
+        assert rec["pid"] == 1
+        assert isinstance(rec["ts"], (int, float)) and rec["ts"] >= 0
+        if rec["ph"] == "X":
+            assert rec["dur"] >= 0
+        if rec["ph"] == "C":       # Perfetto counter tracks: numeric-only
+            assert all(isinstance(v, (int, float))
+                       for v in rec["args"].values())
+    papi = doc["papi"]
+    assert papi["counters"]["iteration"] == eng.iteration
+    assert papi["events_dropped"] == 0
+    assert papi["programs"], "traced run must record program timings"
+    # every admitted request got a residency span on a slot lane
+    slot_spans = [r for r in doc["traceEvents"]
+                  if r["ph"] == "X" and r.get("name", "").startswith("req ")]
+    assert len(slot_spans) == 3
+
+
+def test_prometheus_export_parses(small_model):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr)
+    _submit_all(eng)
+    eng.run(max_iterations=60)
+    text = export_prometheus(tr)
+    line_re = re.compile(
+        r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? -?[0-9eE.+-]+$')
+    names = set()
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        assert line_re.match(line), f"unparseable sample line: {line!r}"
+        names.add(line.split("{")[0].split(" ")[0])
+    for required in ("papi_engine_iterations_total",
+                     "papi_engine_tokens_total",
+                     "papi_engine_preemptions_total",
+                     "papi_engine_degraded_steps_total",
+                     "papi_engine_kv_pages_used",
+                     "papi_engine_program_runs_total"):
+        assert required in names
+    # values come from the aggregates, not the ring
+    assert (f"papi_engine_iterations_total {eng.iteration}"
+            in text.splitlines())
+
+
+def test_jsonl_export_has_trailing_summary(small_model):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr)
+    _submit_all(eng, n=1)
+    eng.run(max_iterations=30)
+    lines = export_jsonl(tr).strip().splitlines()
+    recs = [json.loads(ln) for ln in lines]
+    assert all(r["kind"] in EVENT_KINDS for r in recs[:-1])
+    assert recs[-1]["kind"] == "summary"
+    assert recs[-1]["data"]["counters"]["iteration"] == eng.iteration
+    assert recs[-1]["data"]["programs"]
+
+
+# ----------------------------------------------------------- program timing
+
+def test_program_table_hand_counted(small_model):
+    """One greedy request, max_new=5, eos never fires: exactly 1 main
+    prefill dispatch and 4 plain_fused decode dispatches (prefill commits
+    token 1; each later iteration commits one)."""
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr)
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=5))
+    res = eng.run(max_iterations=30)
+    assert len(res[0].tokens) == 5
+    table = tr.program_table()
+    by_kind = {}
+    for key, t in table.items():
+        by_kind[key.split("|")[0]] = by_kind.get(key.split("|")[0], 0) \
+            + t["count"]
+    assert by_kind.get("main") == 1
+    assert by_kind.get("plain_fused") == 4
+    for t in table.values():
+        assert t["count"] >= 1
+        assert 0.0 <= t["min_s"] <= t["mean_s"] <= t["max_s"]
+        assert abs(t["mean_s"] * t["count"] - t["total_s"]) < 1e-9
+    # program events carry the formatted key and a nonzero duration
+    progs = [ev for ev in tr.events if ev.kind == "program"]
+    assert len(progs) == sum(t["count"] for t in table.values())
+    assert all(ev.dur > 0 for ev in progs)
+
+
+def test_format_program_key_compresses_defaults():
+    assert format_program_key(("spec_fused", 4, "pim", None, False)) == \
+        "spec_fused|4|pim|-|-"
+    assert format_program_key(("main", "pu", True, True)) == "main|pu|True|True"
+
+
+# ------------------------------------------------- observation only (serve)
+
+def test_serve_streams_bit_identical_traced_vs_untraced(small_model):
+    cfg, params = small_model
+    schedule = [[ServeRequest(0, [3, 5, 7], max_new_tokens=6)], [],
+                [ServeRequest(1, [4, 6], max_new_tokens=5)], [],
+                [ServeRequest(2, [5, 7, 9, 11], max_new_tokens=4)]]
+
+    def streams(tracer):
+        eng = _engine(cfg, params, tracer=tracer)
+        got = {}
+        for ev in eng.serve([list(w) for w in schedule]):
+            if ev.finished:
+                got[ev.req_id] = ev.result.tokens
+        return got
+
+    untraced = streams(None)
+    tr = Tracer()
+    traced = streams(tr)
+    assert traced == untraced
+    assert tr.counters["finish:length"] == 3
+    assert tr.counters["submit"] == 3
+
+
+# ------------------------------------- scheduler, faults, degraded, stalls
+
+def test_scheduler_events_carry_estimate_and_threshold(small_model,
+                                                       draft_model):
+    cfg, params = small_model
+    dcfg, dparams = draft_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr, spec_len=3, draft=(dcfg, dparams))
+    _submit_all(eng, n=4, max_new=8)
+    eng.run(max_iterations=80)
+    sched = [ev for ev in tr.events if ev.kind == "scheduler"]
+    assert sched
+    for ev in sched:
+        assert ev.data["alpha"] == eng.scheduler.alpha
+        assert ev.data["assignment"] in ("pu", "pim")
+        assert isinstance(ev.data["ai_estimate"], float)
+    flips = [ev for ev in sched if ev.data["flipped"]]
+    assert len(flips) == tr.counters["scheduler_flip"]
+    assert len(flips) <= eng.scheduler.num_reschedules
+    # a spec run exercises >= 2 distinct compiled programs (draft + verify
+    # at minimum; pu/pim variants when the scheduler flips)
+    assert len(tr.program_table()) >= 2
+
+
+def test_faults_and_degraded_events_match_engine_counts(small_model,
+                                                        draft_model):
+    cfg, params = small_model
+    dcfg, dparams = draft_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr, spec_len=3, draft=(dcfg, dparams),
+                  kv_layout="paged", page_size=8,
+                  faults=FaultInjector(seed=3, nan_p=0.4, start=1, stop=8))
+    _submit_all(eng, n=3, max_new=8)
+    eng.run(max_iterations=80)
+    assert eng.degraded_steps > 0, "fault seed never fired; test is vacuous"
+    assert tr.counters["degraded"] == eng.degraded_steps
+    assert tr.counters["fault:nan"] == eng.faults.counts["nan"]
+    degraded_iters = {ev.iteration for ev in tr.events
+                      if ev.kind == "degraded"}
+    # trace events stamp the 0-based step index; IterStats.iteration is
+    # recorded post-increment (1-based) — same steps, shifted by one
+    flagged = {s.iteration - 1 for s in eng.stats if s.degraded}
+    assert degraded_iters == flagged
+    # the iteration spans carry the degraded flag too
+    spans = {ev.iteration: ev.data["degraded"] for ev in tr.events
+             if ev.kind == "iteration"}
+    assert all(spans[i] for i in flagged)
+
+
+def test_stall_event_emitted_before_raise(small_model):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr, cache_capacity=16,
+                  kv_layout="paged", page_size=4, stall_limit=5)
+    eng.kv.can_admit = lambda *_: False
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=4))
+    with pytest.raises(EngineStallError):
+        eng.run(max_iterations=100)
+    assert tr.counters["stall"] == 1
+    stall = [ev for ev in tr.events if ev.kind == "stall"][-1]
+    assert stall.data["snapshot"]["queue"] == [0]
+    # deferral events accumulated while the head starved
+    assert tr.counters["defer"] >= 5
+
+
+def test_page_events_balance_on_drained_pool(small_model):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr, cache_capacity=32,
+                  kv_layout="paged", page_size=4)
+    _submit_all(eng, n=3, max_new=6)
+    eng.run(max_iterations=60)
+    assert eng.kv.alloc.mapped_count == 0, "pool must drain after run()"
+    mapped = sum(ev.data["mapped_pages"] for ev in tr.events
+                 if ev.kind == "page_reserve")
+    mapped += sum(ev.data["pages"] for ev in tr.events
+                  if ev.kind == "page_map")
+    unmapped = sum(ev.data["pages"] for ev in tr.events
+                   if ev.kind == "page_unmap")
+    assert mapped > 0
+    assert mapped == unmapped
+    # occupancy samples never exceed the watermark
+    for ev in tr.events:
+        if ev.kind == "pool":
+            assert ev.data["used"] <= ev.data["watermark"]
+
+
+# ----------------------------------------------------------- trace_report
+
+def test_trace_report_validates_both_formats(small_model, tmp_path):
+    cfg, params = small_model
+    tr = Tracer()
+    eng = _engine(cfg, params, tracer=tr)
+    _submit_all(eng, n=2)
+    eng.run(max_iterations=40)
+    chrome = tmp_path / "t.trace.json"
+    jsonl = tmp_path / "t.jsonl"
+    write_trace(tr, chrome, "chrome")
+    write_trace(tr, jsonl, "jsonl")
+    assert trace_report.main([str(chrome), "--validate"]) == 0
+    assert trace_report.main([str(jsonl), "--validate"]) == 0
+    # the report (non-validate) path renders without error on both
+    assert trace_report.main([str(chrome)]) == 0
+    assert trace_report.main([str(jsonl)]) == 0
+    # loader normalization: both serializations agree on the aggregates
+    _, summ_c = trace_report.load_trace(chrome)
+    _, summ_j = trace_report.load_trace(jsonl)
+    assert summ_c["counters"] == summ_j["counters"]
+    assert summ_c["programs"].keys() == summ_j["programs"].keys()
+
+
+def test_trace_report_rejects_bad_traces(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"kind": "martian", "iteration": 0,
+                               "ts": 0.0, "dur": 0.0, "data": {}}) + "\n")
+    assert trace_report.main([str(bad), "--validate"]) == 1
+    missing = tmp_path / "nope.json"
+    assert trace_report.main([str(missing), "--validate"]) == 1
+    # an empty trace fails the liveness gate (no scheduler/iteration events)
+    empty = tmp_path / "empty.jsonl"
+    tr = Tracer()
+    write_trace(tr, empty, "jsonl")
+    assert trace_report.main([str(empty), "--validate"]) == 1
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_latency_summary_counts_and_single_token_tpot(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    eng.submit(ServeRequest(0, [3, 5, 7], max_new_tokens=1))
+    eng.submit(ServeRequest(1, [4, 6], max_new_tokens=5))
+    res = {r.req_id: r for r in eng.run(max_iterations=30)}
+    assert len(res[0].tokens) == 1
+    assert res[0].tpot_s is None, "tpot is undefined for a 1-token request"
+    assert res[1].tpot_s is not None and res[1].tpot_s >= 0.0
+    summ = latency_summary(res.values())
+    assert summ["n"] == 2
+    assert summ["ttft_s"]["count"] == 2
+    assert summ["tpot_s"]["count"] == 1   # only the >= 2-token request
+    for field, table in summ.items():
+        if field == "n":
+            continue
+        assert set(table) >= {"p50", "p99", "mean", "count"}

@@ -23,7 +23,14 @@ Two checks over BENCH_engine.json (written/merged by
      all requests completed and a p99 TTFT at or below ARRIVALS_TTFT_CEIL
      iterations — the regressions this guards are the serve loop losing or
      stalling queued requests under live load and admission waves starving
-     first tokens (streamed-vs-oracle identity rides check 1).
+     first tokens (streamed-vs-oracle identity rides check 1);
+  5. the ``telemetry`` section (the --arrivals --trace observation A/B)
+     shows a traced median per-iteration wall within
+     TELEMETRY_OVERHEAD_CEIL of the untraced run and zero events dropped
+     from the ring — the regressions this guards are the tracer hooks
+     creeping onto the untraced hot path and the traced path growing a
+     real per-dispatch cost (its ``tokens_bit_identical`` flag — tracing
+     must never perturb streams — rides check 1).
 
 Usage:  python tools/check_bench.py [path/to/BENCH_engine.json]
 Exits non-zero with a message on the first violated check.
@@ -54,6 +61,15 @@ PRESSURE_DELAY_CEIL = 60
 # path (prefill stalling behind decodes, or waves never draining the
 # queue) shows up as tens of iterations.
 ARRIVALS_TTFT_CEIL = 16
+
+# Traced-vs-untraced overhead ceiling for the --trace telemetry A/B: the
+# traced spec_dense run's median per-iteration wall may exceed the
+# untraced run's by at most this fraction.  The traced path adds one
+# perf_counter pair + block_until_ready per dispatch — the untraced
+# engine already syncs every iteration through `_fetch`, so the honest
+# cost is bookkeeping, not a device sync.  Median over post-warmup decode
+# iterations keeps CI-runner noise out of the ratio.
+TELEMETRY_OVERHEAD_CEIL = 0.05
 
 
 def iter_identity_flags(node, path=""):
@@ -156,13 +172,39 @@ def main() -> int:
         elif not modes:
             failures.append("arrivals section has no modes")
 
+    try:
+        tel = bench["telemetry"]
+        overhead = tel["overhead_frac"]
+        dropped = tel["events_dropped"]
+    except KeyError as missing:
+        failures.append(f"telemetry section incomplete or absent "
+                        f"(missing {missing}) — run "
+                        "benchmarks/engine_hotpath.py --arrivals 0.5 "
+                        "--trace trace.telemetry.json")
+    else:
+        if overhead > TELEMETRY_OVERHEAD_CEIL:
+            failures.append(
+                f"tracing overhead regressed: traced median wall "
+                f"{overhead:+.1%} over untraced > ceiling "
+                f"{TELEMETRY_OVERHEAD_CEIL:.0%} (timed_call grew a real "
+                "per-dispatch cost?)")
+        if dropped:
+            failures.append(
+                f"telemetry ring dropped {dropped} events on the bench "
+                "trace — capacity no longer covers a short serve run")
+        if overhead <= TELEMETRY_OVERHEAD_CEIL and not dropped:
+            print(f"telemetry: traced wall {overhead:+.1%} vs untraced "
+                  f"(ceiling {TELEMETRY_OVERHEAD_CEIL:.0%}), "
+                  f"{tel.get('events', '?')} events, 0 dropped — OK")
+
     if failures:
         for f in failures:
             print(f"check_bench FAIL: {f}")
         return 1
     print(f"check_bench: {len(flags)} identity flags true, paged "
           "speculative above floor, pressure trace bounded, arrivals "
-          "trace completed within the TTFT ceiling")
+          "trace completed within the TTFT ceiling, telemetry overhead "
+          "under the ceiling")
     return 0
 
 
