@@ -144,7 +144,7 @@ def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
         resident = eng.kv.alloc.watermark * per_page
     else:
         resident = reserved
-    return {
+    metrics = {
         "fused": fused,
         "spec_len": spec_len,
         "iterations": len(eng.stats),
@@ -164,6 +164,10 @@ def run_engine(cfg, params, draft_params, *, fused: bool, spec_len: int,
         "token_streams": [r.tokens for r in sorted(results,
                                                    key=lambda r: r.req_id)],
     }
+    rep = eng.sanitize_report()
+    if rep is not None:
+        metrics["sanitize"] = rep.asdict()
+    return metrics
 
 
 def main() -> int:
@@ -208,6 +212,13 @@ def main() -> int:
                          "under a live Tracer, write the Chrome trace to "
                          "PATH, and merge a 'telemetry' section (traced vs "
                          "untraced throughput + bit-identity) into --out")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the plain-fused and speculative-fused engines "
+                         "under the runtime sanitizer (transfer-guard allow-"
+                         "scopes, rank-promotion-raise, per-iteration "
+                         "transfer budget, zero-steady-state-recompile "
+                         "census); merges a 'sanitize' section into --out "
+                         "and exits 1 on any SanitizeError")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_engine.json"))
     args = ap.parse_args()
 
@@ -217,12 +228,13 @@ def main() -> int:
         return 2
 
     if sum((bool(args.mesh), args.kv == "paged", args.long_prompt,
-            args.pressure, args.arrivals is not None)) > 1:
+            args.pressure, args.arrivals is not None,
+            args.sanitize)) > 1:
         # each mode is its own early-returning A/B section; combining them
         # would silently skip the other mode's identity gate
         print("--mesh / --kv paged / --long-prompt / --pressure / --arrivals "
-              "are separate A/B modes: run one per invocation (each merges "
-              "its own section into --out)")
+              "/ --sanitize are separate A/B modes: run one per invocation "
+              "(each merges its own section into --out)")
         return 2
 
     # mesh sizing must precede the first jax backend touch
@@ -250,6 +262,35 @@ def main() -> int:
     cfg = get_config("qwen2-0.5b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     draft_params = init_params(cfg, jax.random.PRNGKey(9))
+
+    if args.sanitize:
+        # Sanitized smoke: the plain and speculative fused engines under
+        # the runtime gates.  A SanitizeError (budget overrun, steady-state
+        # retrace, guarded transfer, implicit rank promotion) exits 1; the
+        # recorded section lets check_bench re-verify the budget numbers.
+        from repro.debug import SanitizeError
+        section = {}
+        try:
+            for mode, spec_len in (("plain_fused", 1),
+                                   ("spec_fused", args.spec_len)):
+                r = run_engine(cfg, params, draft_params,
+                               fused=True, spec_len=spec_len, sanitize=True)
+                section[mode] = r["sanitize"]
+        except SanitizeError as exc:
+            print(f"sanitize FAILED: {exc}")
+            return 1
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["sanitize"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        for mode, rep in section.items():
+            print(f"sanitize {mode}: {rep['steady_iterations']}/"
+                  f"{rep['iterations']} steady iterations at "
+                  f"{rep['transfers_per_steady_iter']:.2f} transfers/iter "
+                  f"(budget {rep['transfer_budget']}), {rep['programs']} "
+                  f"programs, {rep['recompiles']} steady-state recompiles")
+        print(f"wrote {out}")
+        return 0
 
     if args.long_prompt:
         # Chunked-prefill A/B: the SAME engine code with an 8-token window

@@ -1,0 +1,7 @@
+"""Runtime debugging aids for the serving engine (see sanitize.py)."""
+from repro.debug.sanitize import (  # noqa: F401
+    EngineSanitizer,
+    SanitizeError,
+    SanitizeReport,
+    sanitized,
+)

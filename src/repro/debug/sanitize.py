@@ -1,0 +1,152 @@
+"""Runtime sanitizer for the engine's tracing discipline.
+
+The static side (tools/papilint) proves the *code* routes every
+device->host sync through `PapiEngine._fetch` and keys every jit cache on
+the scheduler-visible flags.  This module machine-checks the same
+invariants at *runtime*:
+
+- ``sanitized()`` wraps each engine step in
+  ``jax.transfer_guard_device_to_host("disallow")`` so any un-sanctioned
+  device->host copy raises on real accelerators (on the CPU backend
+  device == host and the guard never fires — the transfer *counting*
+  below is the check that works everywhere), plus
+  ``jax.numpy_rank_promotion("raise")`` (the model's broadcasts are all
+  explicit) and, opted in, ``jax.debug_nans``.
+- ``EngineSanitizer.after_step`` asserts the transfer budget — a
+  steady-state fused decode iteration (no admission, no prefill chunks,
+  no degrade, no preemption) performs EXACTLY ``transfer_budget`` host
+  transfers (the paper's "one sync per iteration" claim) — and takes a
+  compile census over both jit caches: once a program key has compiled,
+  a second signature for the same key is a silent steady-state retrace
+  and raises ``SanitizeError``.
+
+Wiring: ``PapiEngine(sanitize=True)`` or ``launch/serve.py --sanitize``;
+the CI smoke gate runs ``benchmarks/engine_hotpath.py --sanitize`` and
+check_bench verifies the recorded budget numbers.
+
+debug-NaNs policy: enabled automatically only when the engine runs the
+Pallas kernels in interpret mode (``pim_interpret=True``) AND no fault
+injector is attached — injected logits faults ARE NaNs, and the
+finite-logits guard must see them before debug_nans aborts the step.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+
+
+class SanitizeError(RuntimeError):
+    """A tracing-discipline invariant was violated at runtime."""
+
+
+@dataclasses.dataclass
+class SanitizeReport:
+    """Counters accumulated by EngineSanitizer.after_step."""
+
+    transfer_budget: int = 1
+    iterations: int = 0          # steps that recorded an IterStats
+    steady_iterations: int = 0   # fused decode-only steps (budget applies)
+    steady_transfers: int = 0    # host transfers over those steps
+    recompiles: int = 0          # stays 0 — a retrace raises instead
+    programs: int = 0            # distinct jit-cache keys compiled
+
+    @property
+    def transfers_per_steady_iter(self) -> float:
+        if self.steady_iterations == 0:
+            return 0.0
+        return self.steady_transfers / self.steady_iterations
+
+    def asdict(self) -> dict[str, Any]:
+        out = dataclasses.asdict(self)
+        out["transfers_per_steady_iter"] = self.transfers_per_steady_iter
+        return out
+
+
+@contextlib.contextmanager
+def sanitized(*, rank_promotion: str = "raise", debug_nans: bool = False):
+    """Strict-mode JAX context for the decode loop.
+
+    Device->host transfers outside an explicit allow-scope raise (real
+    accelerators only — the CPU backend's device IS the host), implicit
+    rank promotion raises everywhere, and NaNs raise when opted in.
+    """
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.transfer_guard_device_to_host("disallow"))
+        stack.enter_context(jax.numpy_rank_promotion(rank_promotion))
+        if debug_nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield
+
+
+@contextlib.contextmanager
+def transfer_allowed():
+    """Explicit allow-scope for a sanctioned device->host sync site."""
+    with jax.transfer_guard_device_to_host("allow"):
+        yield
+
+
+class EngineSanitizer:
+    """Per-engine runtime gate: transfer budget + compile census.
+
+    The engine calls ``scope(engine)`` around each step, wraps its one
+    sanctioned ``jax.device_get`` in ``allow_transfers()``, and calls
+    ``after_step(engine, stepped=...)`` when the step returns.
+    """
+
+    def __init__(self, *, transfer_budget: int = 1,
+                 debug_nans: bool | None = None):
+        self.report = SanitizeReport(transfer_budget=transfer_budget)
+        self._debug_nans = debug_nans
+        self._cache_sizes: dict[Any, int] = {}
+
+    def scope(self, engine):
+        debug_nans = self._debug_nans
+        if debug_nans is None:
+            debug_nans = bool(getattr(engine, "pim_interpret", False)) \
+                and getattr(engine, "faults", None) is None
+        return sanitized(debug_nans=debug_nans)
+
+    def allow_transfers(self):
+        return transfer_allowed()
+
+    def after_step(self, engine, *, stepped: bool) -> None:
+        # --- compile census: a second signature under an existing key is
+        # a steady-state retrace (the flag flip should have produced a NEW
+        # key — that's PL003's whole point)
+        caches = {}
+        caches.update(getattr(engine, "_decode_jit", {}))
+        caches.update(getattr(engine, "_prefill_jit", {}))
+        for key, fn in caches.items():
+            size_fn = getattr(fn, "_cache_size", None)
+            size = size_fn() if callable(size_fn) else 1
+            prev = self._cache_sizes.get(key, 0)
+            if size > max(prev, 1):
+                raise SanitizeError(
+                    f"steady-state retrace: program {key!r} now holds "
+                    f"{size} compiled signatures (was {max(prev, 1)}) — "
+                    "an input shape or static arg changed without a new "
+                    "jit-cache key")
+            self._cache_sizes[key] = max(prev, size)
+        self.report.programs = len(self._cache_sizes)
+
+        if not stepped:
+            return
+        st = engine.stats[-1]
+        self.report.iterations += 1
+        steady = (getattr(engine, "fused", False)
+                  and st.admitted == 0 and st.arrivals == 0
+                  and st.decode_slots > 0 and st.prefill_slots == 0
+                  and st.degraded == 0 and st.preemptions == 0)
+        if not steady:
+            return
+        self.report.steady_iterations += 1
+        self.report.steady_transfers += st.transfers
+        if st.transfers != self.report.transfer_budget:
+            raise SanitizeError(
+                f"transfer budget violated at iteration {st.iteration}: "
+                f"{st.transfers} host transfer(s) in a steady-state fused "
+                f"decode step (budget {self.report.transfer_budget}) — an "
+                "un-batched sync crept onto the hot path")

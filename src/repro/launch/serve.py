@@ -102,6 +102,13 @@ def main() -> None:
                          "'--fault nan:0.2 --fault admit:0.5'.  The engine "
                          "degrades gracefully instead of emitting garbage — "
                          "see docs/ARCHITECTURE.md, 'Failure model'")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run under the tracing-discipline sanitizer "
+                         "(repro.debug.sanitize): transfer-guard around "
+                         "every step, rank-promotion-raise, a hard "
+                         "one-transfer-per-steady-iteration budget, and "
+                         "a zero-retrace compile census — aborts on the "
+                         "first violated invariant")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed of the fault schedule (a pure function of "
                          "(seed, iteration), so runs replay exactly)")
@@ -189,7 +196,7 @@ def main() -> None:
         kv_layout=args.kv, page_size=args.page_size,
         max_blocks=args.max_blocks,
         faults=parse_fault_specs(args.fault, seed=args.fault_seed),
-        tracer=tracer,
+        tracer=tracer, sanitize=args.sanitize,
     )
     rng = np.random.default_rng(args.seed)
     # Prompts are no longer clamped to the prefill window — admission chunks
@@ -265,6 +272,13 @@ def main() -> None:
     wall = sum(s.wall_s for s in eng.stats)
     print(f"tokens: {tok}  wall: {wall:.2f}s  tok/s: {tok / max(wall, 1e-9):.1f}")
     print(f"reschedules: {eng.scheduler.num_reschedules}")
+    rep = eng.sanitize_report()
+    if rep is not None:
+        print(f"sanitize: {rep.steady_iterations}/{rep.iterations} steady "
+              f"iterations at {rep.transfers_per_steady_iter:.2f} "
+              f"transfers/iter (budget {rep.transfer_budget}), "
+              f"{rep.programs} programs, {rep.recompiles} steady-state "
+              "recompiles")
     if eng.kv is not None:
         st = eng.kv.stats()
         frag = max((s.kv_fragmentation for s in eng.stats), default=0.0)

@@ -58,7 +58,9 @@ def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
     # activation all-gathers under sequence parallelism (§Perf iteration 2).
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
-    return x * inv * weight.astype(x.dtype)
+    # explicit broadcast: keeps the sanitizer's rank-promotion-raise happy
+    w = jnp.reshape(weight.astype(x.dtype), (1,) * (x.ndim - 1) + (-1,))
+    return x * inv * w
 
 
 def layernorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
@@ -67,8 +69,8 @@ def layernorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
     mean = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     inv = jax.lax.rsqrt(var + eps)
-    return (((x.astype(jnp.float32) - mean) * inv).astype(x.dtype)
-            * weight.astype(x.dtype))
+    w = jnp.reshape(weight.astype(x.dtype), (1,) * (x.ndim - 1) + (-1,))
+    return ((x.astype(jnp.float32) - mean) * inv).astype(x.dtype) * w
 
 
 def norm(x: jax.Array, weight: jax.Array, kind: str, eps: float) -> jax.Array:
@@ -91,7 +93,8 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
     hd = x.shape[-1]
     inv = rope_freqs(hd, theta)                          # [hd/2]
-    angles = positions[..., None].astype(jnp.float32) * inv  # [..., seq, hd/2]
+    pos = positions[..., None].astype(jnp.float32)       # [..., seq, 1]
+    angles = pos * jnp.reshape(inv, (1,) * (pos.ndim - 1) + (-1,))
     angles = angles[..., None, :]                        # broadcast over heads
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
@@ -115,7 +118,8 @@ def apply_m_rope(
     )                                                    # [hd/2] in {0,1,2}
     pos = jnp.take(positions, sec_id, axis=-2)           # [..., hd/2, seq]
     pos = jnp.swapaxes(pos, -1, -2).astype(jnp.float32)  # [..., seq, hd/2]
-    angles = (pos * inv)[..., None, :]                   # [..., seq, 1, hd/2]
+    inv_b = jnp.reshape(inv, (1,) * (pos.ndim - 1) + (-1,))
+    angles = (pos * inv_b)[..., None, :]                 # [..., seq, 1, hd/2]
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
@@ -168,9 +172,9 @@ def qkv_project(
 
     q, k, v = proj(p["w_q"]), proj(p["w_k"]), proj(p["w_v"])
     if "b_q" in p:
-        q = q + p["b_q"]
-        k = k + p["b_k"]
-        v = v + p["b_v"]
+        q = q + p["b_q"][None, None]
+        k = k + p["b_k"][None, None]
+        v = v + p["b_v"][None, None]
     # Re-shard at the attention boundary ONCE per layer: heads over `model`
     # where divisible (TP attention), otherwise an explicit seq-gather here.
     # Without this constraint the seq(SP)-sharded K/V flow into the blocked

@@ -181,6 +181,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import PapiScheduler
+from repro.debug.sanitize import EngineSanitizer
 from repro.distributed.sharding import axis_rules, serve_rules
 from repro.models import (cache_shardings, decode_step, init_cache,
                           init_paged_cache, mixed_step,
@@ -316,6 +317,7 @@ class IterStats:
     kv_fragmentation: float = 0.0  # tail-of-page waste share of mapped rows
     # continuous-batching serve loop only (zeros under offline run()):
     arrivals: int = 0        # requests that arrived this iteration
+    admitted: int = 0        # requests admitted to slots this iteration
     queued: int = 0          # queue depth after this iteration's admission
     prefill_slots: int = 0   # slots mid-chunked-prefill this iteration
     decode_slots: int = 0    # slots that ran a decode step this iteration
@@ -360,6 +362,7 @@ class PapiEngine:
         stall_limit: int | None = 256,
         debug_invariants: bool = False,
         tracer: Tracer | None = None,
+        sanitize: bool = False,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
         assert kv_layout in ("dense", "paged"), kv_layout
@@ -390,6 +393,10 @@ class PapiEngine:
         # bare dispatch, so the traced-off hot path is unchanged (gated by
         # the traced-vs-untraced A/B in benchmarks/engine_hotpath.py)
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # runtime sanitizer (repro.debug.sanitize): transfer-guard scopes
+        # around every step, per-iteration transfer-budget assertions, and
+        # a jit-cache compile census — None keeps the hot path untouched
+        self._sanitizer = EngineSanitizer() if sanitize else None
         self.scheduler = PapiScheduler(cfg, alpha=alpha, tlp=spec_len,
                                        eos_token=eos_token)
         self.scheduler.initial_schedule(0, spec_len)
@@ -682,7 +689,13 @@ class PapiEngine:
         """Single device->host sync round-trip (counted).  Sharded arrays
         gather here — still one round trip from the host's point of view."""
         self.host_transfers += 1
-        got = jax.device_get(arrays)
+        if self._sanitizer is not None:
+            with self._sanitizer.allow_transfers():
+                # papilint: allow-transfer(the engine's single counted sync point)
+                got = jax.device_get(arrays)
+        else:
+            # papilint: allow-transfer(the engine's single counted sync point)
+            got = jax.device_get(arrays)
         return got[0] if len(arrays) == 1 else got
 
     def _scope(self):
@@ -800,6 +813,7 @@ class PapiEngine:
         oracle path, compiled once per model and NEVER fault-injected.  Its
         jit key is independent of the scheduler's fc assignment — it must
         always be the same executable the correctness suite validates."""
+        # papilint: disable=PL003 (oracle pins attn/fc at dispatch; one executable by contract)
         key = ("oracle", which)
         if key not in self._decode_jit:
             cfg = self.draft_cfg if which == "draft" else self.cfg
@@ -843,6 +857,7 @@ class PapiEngine:
                 _, self.draft_cache = self._call(
                     dkey, dfn, self.draft_params, self.draft_cache,
                     last[:, None])
+            # papilint: allow-transfer(degraded re-run commits its token)
             nxt_h = self._fetch(greedy(logits[:, -1]))
         return (np.asarray(nxt_h)[:, None].astype(np.int32),
                 np.ones(self.max_slots), None)
@@ -905,6 +920,7 @@ class PapiEngine:
         """Degraded-mode wave: the XLA-attention / plain-FC oracle, never
         fault-injected, keyed independently of the scheduler's assignment
         (same contract as `_get_oracle`)."""
+        # papilint: disable=PL003 (oracle pins attn/fc at dispatch; one executable by contract)
         key = ("oracle_wave",)
         if key not in self._prefill_jit:
             cfg = self.cfg
@@ -1011,6 +1027,7 @@ class PapiEngine:
         for s in prefilling:
             self.slot_offset[s] += int(clens[s])
         if finals:
+            # papilint: allow-transfer(first tokens of finishing chunks)
             nxt_h, _ = self._fetch(nxt, bad)
             self._finalize_first_tokens(finals, np.asarray(nxt_h))
 
@@ -1048,6 +1065,7 @@ class PapiEngine:
                 self.draft_cache = self._call(
                     dkey, dfn, self.draft_params, self.draft_cache, ct,
                     jnp.asarray(chunk_lens), pm, pp)
+            # papilint: allow-transfer(the wave's one token+fault fetch)
             nxt_h, bad_h = self._fetch(nxt, bad)
             if bad_h:
                 # non-finite logits: drop the poisoned wave (cache2 never
@@ -1075,6 +1093,7 @@ class PapiEngine:
             okey, ofn = self._get_oracle_wave()
             nxt, self.cache = self._call(
                 okey, ofn, self.params, self.cache, ct, cl, pm, pp)
+            # papilint: allow-transfer(oracle wave re-run commits tokens)
             return np.asarray(self._fetch(nxt))
 
     def _admit(self) -> int:
@@ -1431,6 +1450,7 @@ class PapiEngine:
                           if len(req.prompt) <= self.prefill_len]
             if not batch_rows:
                 return admitted, False
+            # papilint: allow-transfer(admission wave's first tokens)
             first_h = np.array(self._fetch(first))
         else:
             # ---- chunks 1..: prompts longer than the window continue
@@ -1470,6 +1490,7 @@ class PapiEngine:
                             ct, cl)
                 if final:
                     wave_finals.append((nxt, final))
+            # papilint: allow-transfer(one batched sync for all waves)
             got = self._fetch(first, *(nxt for nxt, _ in wave_finals))
             if wave_finals:
                 first_h = np.array(got[0])
@@ -1514,6 +1535,7 @@ class PapiEngine:
                     nxt, bad, cache2 = self._call(
                         fkey, ffn, self.params, self.cache, last,
                         self._fault_code())
+                    # papilint: allow-transfer(the iteration's one fetch)
                     nxt_h, bad_h = self._fetch(nxt, bad)
                     if bad_h:
                         # non-finite logits: drop the poisoned step (the
@@ -1525,6 +1547,7 @@ class PapiEngine:
                     pkey, pfn = self._get_decode("plain")
                     logits, self.cache = self._call(
                         pkey, pfn, self.params, self.cache, last[:, None])
+                    # papilint: allow-transfer(legacy unfused per-step fetch)
                     nxt_h = self._fetch(greedy(logits[:, -1]))
                 return (np.asarray(nxt_h)[:, None].astype(np.int32),
                         np.ones(self.max_slots), None)
@@ -1539,6 +1562,7 @@ class PapiEngine:
             key, fn, self.params, self.draft_params, self.cache,
             self.draft_cache, jnp.asarray(self.slot_last), self._fault_code(),
         )
+        # papilint: allow-transfer(the spec iteration's one bundle fetch)
         out_h, acc_h, fin_h, bad_h = self._fetch(out, accepted, fin, bad)
         if bad_h:
             # non-finite verify logits: neither cache is assigned (both
@@ -1564,6 +1588,7 @@ class PapiEngine:
                 last
             )
             nxt = greedy(logits[:, -1])
+            # papilint: allow-transfer(legacy host-spec baseline, per draft step)
             proposals.append(np.asarray(self._fetch(nxt)))
             last = nxt[:, None]
         window = np.stack(proposals[:k], axis=1)          # [slots, k]
@@ -1573,6 +1598,7 @@ class PapiEngine:
         logits, self.cache = self._call(
             vkey, vfn, self.params, self.cache, jnp.asarray(window)
         )
+        # papilint: allow-transfer(legacy host-spec verify fetch)
         target = np.asarray(self._fetch(greedy(logits)))  # [slots, k]
 
         # 3) accept longest matching prefix; roll back caches per slot
@@ -1595,6 +1621,19 @@ class PapiEngine:
         return out, accepted.astype(np.float64), None
 
     def step(self) -> None:
+        if self._sanitizer is None:
+            return self._step_impl()
+        stats0 = len(self.stats)
+        with self._sanitizer.scope(self):
+            self._step_impl()
+        self._sanitizer.after_step(self, stepped=len(self.stats) > stats0)
+
+    def sanitize_report(self):
+        """The sanitizer's accumulated budget/compile counters, or None
+        when the engine was built without ``sanitize=True``."""
+        return None if self._sanitizer is None else self._sanitizer.report
+
+    def _step_impl(self) -> None:
         t0 = time.perf_counter()
         transfers0 = self.host_transfers
         results0 = len(self.results)
@@ -1789,6 +1828,7 @@ class PapiEngine:
             kv_page_watermark=kv_peak,
             kv_fragmentation=kv_frag,
             arrivals=arrived,
+            admitted=admitted,
             queued=len(self.queue),
             prefill_slots=chunked,
             decode_slots=len(decoding),

@@ -212,6 +212,7 @@ class Tracer:
         routes through the bare `fn(*args)` when tracing is off."""
         import jax   # deferred: exporters/report paths never need jax
         start = time.perf_counter()
+        # papilint: allow-transfer(timed dispatch must block to measure device wall)
         out = jax.block_until_ready(fn(*args))
         self.record_program(key, time.perf_counter() - start, start=start)
         return out
@@ -441,6 +442,13 @@ def export_prometheus(tracer) -> str:
 
     metric("papi_engine_iterations_total", "counter",
            "Engine iterations executed.", [("", c.get("iteration", 0))])
+    # one labelled sample per EVENT_KINDS member, zero-filled, so the
+    # exposition always covers the full event vocabulary (PL005's runtime
+    # counterpart: a new kind shows up here without any exporter edit)
+    metric("papi_engine_events_total", "counter",
+           "Telemetry events recorded, by event kind.",
+           [(f'{{kind="{_prom_escape(k)}"}}', c.get(k, 0))
+            for k in sorted(EVENT_KINDS)])
     metric("papi_engine_tokens_total", "counter",
            "Output tokens committed.", [("", c.get("tokens", 0))])
     reasons = sorted(k.split(":", 1)[1] for k in c if k.startswith("finish:"))

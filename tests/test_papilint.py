@@ -1,0 +1,484 @@
+"""papilint static-analysis suite (tools/papilint):
+
+  * PL001 flags host syncs (.item(), device_get, int()-on-device, the
+    sanctioned `_fetch` wrapper) reachable from the configured hot-path
+    closure, and an allow-transfer annotation WITH a reason silences it
+    (a reasonless or unrecognized annotation is PL000);
+  * PL002 flags getters returning non-(key, fn) shapes, bare dispatch of
+    getter-returned programs, key/fn mismatches through `_call`, and
+    direct calls into a `*_jit` cache;
+  * PL003 reproduces the seed's jit-cache-key bug as a fixture — a key
+    blind to the ambient FC variant — plus a read-but-not-keyed flag;
+    keys derived from `_jit_key` or capturing the ambient reads pass,
+    and a disable annotation with a reason is honored;
+  * PL004 flags index_map arity mismatches against grid rank + scalar
+    prefetch, kernel positional-ref counts against the spec totals, and
+    clamped (ragged-tail) index maps whose kernel has no pl.when guard;
+  * PL005 flags mirror drift, exporters missing event kinds, and
+    undocumented CLI flags;
+  * the config parser round-trips the real [tool.papilint] table and
+    rejects non-string values;
+  * the repo itself lints clean: `python -m tools.papilint src tools
+    benchmarks` exits 0 (the CI gate), and a bad fixture exits 1.
+"""
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT))
+
+from tools.papilint.config import (Config, ConfigError,  # noqa: E402
+                                   load_config, parse_pyproject)
+from tools.papilint.core import run_paths  # noqa: E402
+
+
+def lint(tmp_path, source, cfg, name="mod.py"):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    return run_paths([f], cfg, tmp_path)
+
+
+def codes(violations):
+    return [v.code for v in violations]
+
+
+# ------------------------------------------------------------------ PL001
+
+HOT_CFG = Config(hot_path=["mod.py::Engine.step"],
+                 transfer_wrappers=["_fetch"],
+                 host_state_attrs=["iteration"])
+
+
+def test_pl001_item_in_hot_path(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def step(self):
+                x = self._call(("k",), None)
+                return x.item()
+        """, HOT_CFG)
+    assert codes(vs) == ["PL001"]
+    assert ".item()" in vs[0].message
+
+
+def test_pl001_transitive_closure_reaches_helpers(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def step(self):
+                return self._inner()
+
+            def _inner(self):
+                return jax.device_get(self.buf)
+        """, HOT_CFG)
+    assert codes(vs) == ["PL001"]
+    assert "device_get" in vs[0].message
+
+
+def test_pl001_annotated_sync_is_sanctioned(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def step(self):
+                # papilint: allow-transfer(the iteration's one fetch)
+                return jax.device_get(self.buf)
+        """, HOT_CFG)
+    assert vs == []
+
+
+def test_pl001_reasonless_annotation_is_pl000(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def step(self):
+                # papilint: allow-transfer()
+                return jax.device_get(self.buf)
+        """, HOT_CFG)
+    assert set(codes(vs)) == {"PL000", "PL001"}
+
+
+def test_pl001_unrecognized_annotation_is_pl000(tmp_path):
+    vs = lint(tmp_path, """
+        # papilint: frobnicate the widgets
+        X = 1
+        """, Config())
+    assert codes(vs) == ["PL000"]
+
+
+def test_pl001_int_on_device_value(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def step(self):
+                x = self._call(("k",), None)
+                return int(x)
+        """, HOT_CFG)
+    assert codes(vs) == ["PL001"]
+    assert "int()" in vs[0].message
+
+
+def test_pl001_host_state_arithmetic_is_clean(tmp_path):
+    vs = lint(tmp_path, """
+        import numpy as np
+
+        class Engine:
+            def step(self):
+                n = int(self.iteration)
+                h = self._fetch(self.buf)
+                m = np.asarray(h)
+                return n + int(h) + int(m[0])
+        """, HOT_CFG)
+    # only the un-annotated _fetch call itself should be flagged
+    assert codes(vs) == ["PL001"]
+    assert "_fetch" in vs[0].message
+
+
+def test_pl001_cold_functions_are_ignored(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def step(self):
+                return 1
+
+            def debug_dump(self):
+                return self.buf.item()
+        """, HOT_CFG)
+    assert vs == []
+
+
+# ------------------------------------------------------------------ PL002
+
+ENGINE_CFG = Config(engine_files=["mod.py"])
+
+
+def test_pl002_bare_dispatch_flagged(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def _get_prog(self):
+                key = ("k",)
+                return key, self.fn
+
+            def step(self):
+                key, fn = self._get_prog()
+                return fn(1)
+        """, ENGINE_CFG)
+    assert codes(vs) == ["PL002"]
+    assert "bare dispatch" in vs[0].message
+
+
+def test_pl002_getter_must_return_pair(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def _get_prog(self):
+                return self.fn
+        """, ENGINE_CFG)
+    assert codes(vs) == ["PL002"]
+    assert "(key, fn)" in vs[0].message
+
+
+def test_pl002_key_fn_mismatch(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def _get_prog(self):
+                key = ("k",)
+                return key, self.fn
+
+            def step(self):
+                key, fn = self._get_prog()
+                other = ("x",)
+                return self._call(other, fn, 1)
+        """, ENGINE_CFG)
+    assert codes(vs) == ["PL002"]
+    assert "misattributed" in vs[0].message
+
+
+def test_pl002_direct_jit_cache_call(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def step(self):
+                return self._decode_jit[("k",)](self.x)
+        """, ENGINE_CFG)
+    assert codes(vs) == ["PL002"]
+    assert "_decode_jit" in vs[0].message
+
+
+def test_pl002_routed_dispatch_is_clean(tmp_path):
+    vs = lint(tmp_path, """
+        class Engine:
+            def _get_prog(self):
+                key = ("k",)
+                return key, self.fn
+
+            def step(self):
+                key, fn = self._get_prog()
+                return self._call(key, fn, 1)
+        """, ENGINE_CFG)
+    assert vs == []
+
+
+# ------------------------------------------------------------------ PL003
+
+KEY_CFG = Config(engine_files=["mod.py"],
+                 jit_key_flags=["spec_len"],
+                 ambient_key_reads=["current_fc_variant",
+                                    "current_fc_interpret"])
+
+
+def test_pl003_seed_bug_regression(tmp_path):
+    # the seed's actual bug: a (kind, spec_len) key that never captures
+    # the ambient FC variant, so whichever variant traced first is baked
+    # into the cache and a scheduler flip silently reuses it
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def _get_decode(self):
+                key = ("decode", self.spec_len)
+                fn = jax.jit(lambda x: x)
+                return key, fn
+        """, KEY_CFG)
+    assert codes(vs) == ["PL003"]
+    assert "seed bug" in vs[0].message
+
+
+def test_pl003_flag_read_but_not_keyed(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def _get_decode(self):
+                key = ("decode", current_fc_variant())
+                window = self.spec_len + 1
+                fn = jax.jit(lambda x: x[:window])
+                return key, fn
+        """, KEY_CFG)
+    assert codes(vs) == ["PL003"]
+    assert "self.spec_len" in vs[0].message
+
+
+def test_pl003_builder_derived_key_is_clean(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def _jit_key(self, kind):
+                return (kind, self.spec_len, self.scheduler.fc_assignment)
+
+            def _get_decode(self):
+                key = self._jit_key("decode")
+                fn = jax.jit(lambda x: x)
+                return key, fn
+        """, KEY_CFG)
+    assert vs == []
+
+
+def test_pl003_ambient_capturing_key_is_clean(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def _get_prefill(self):
+                key = ("prefill", current_fc_variant(),
+                       current_fc_interpret())
+                fn = jax.jit(lambda x: x)
+                return key, fn
+        """, KEY_CFG)
+    assert vs == []
+
+
+def test_pl003_disable_annotation_honored(tmp_path):
+    vs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def _get_oracle(self):
+                # papilint: disable=PL003 (oracle pins the variant at dispatch)
+                key = ("oracle",)
+                fn = jax.jit(lambda x: x)
+                return key, fn
+        """, KEY_CFG)
+    assert vs == []
+
+
+# ------------------------------------------------------------------ PL004
+
+def test_pl004_index_map_arity(tmp_path):
+    vs = lint(tmp_path, """
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                _kernel,
+                grid=(4, 2),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+        """, Config())
+    assert codes(vs) == ["PL004"]
+    assert "1 parameter(s)" in vs[0].message and "provides 2" in vs[0].message
+
+
+def test_pl004_kernel_ref_count(tmp_path):
+    vs = lint(tmp_path, """
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, y_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                _kernel,
+                grid=(4, 2),
+                in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+        """, Config())
+    assert codes(vs) == ["PL004"]
+    assert "3 positional ref(s)" in vs[0].message
+
+
+def test_pl004_clamp_without_when_guard(tmp_path):
+    vs = lint(tmp_path, """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = o_ref[...] + x_ref[...]
+
+        def run(x):
+            def x_index(i, j):
+                return (jnp.minimum(i, 3), j)
+            return pl.pallas_call(
+                _kernel,
+                grid=(4, 2),
+                in_specs=[pl.BlockSpec((8, 8), x_index)],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+        """, Config())
+    assert codes(vs) == ["PL004"]
+    assert "pl.when" in vs[0].message
+
+
+def test_pl004_guarded_clamp_is_clean(tmp_path):
+    vs = lint(tmp_path, """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            @pl.when(pl.program_id(0) < 3)
+            def _():
+                o_ref[...] = o_ref[...] + x_ref[...]
+
+        def run(x):
+            def x_index(i, j):
+                return (jnp.minimum(i, 3), j)
+            return pl.pallas_call(
+                _kernel,
+                grid=(4, 2),
+                in_specs=[pl.BlockSpec((8, 8), x_index)],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )(x)
+        """, Config())
+    assert vs == []
+
+
+# ------------------------------------------------------------------ PL005
+
+def test_pl005_mirror_drift(tmp_path):
+    (tmp_path / "a.py").write_text('KINDS = frozenset({"a", "b"})\n')
+    (tmp_path / "b.py").write_text('KINDS = frozenset({"a"})\n')
+    cfg = Config(mirrors=["a.py::KINDS=b.py::KINDS"])
+    vs = run_paths([], cfg, tmp_path)
+    assert codes(vs) == ["PL005"]
+    assert "mirror drift" in vs[0].message and "'b'" in vs[0].message
+
+
+def test_pl005_mirror_in_sync(tmp_path):
+    (tmp_path / "a.py").write_text('KINDS = frozenset({"a", "b"})\n')
+    (tmp_path / "b.py").write_text('KINDS = frozenset({"b", "a"})\n')
+    cfg = Config(mirrors=["a.py::KINDS=b.py::KINDS"])
+    assert run_paths([], cfg, tmp_path) == []
+
+
+def test_pl005_exporter_missing_kind(tmp_path):
+    (tmp_path / "a.py").write_text('KINDS = frozenset({"a", "b"})\n')
+    (tmp_path / "exp.py").write_text(textwrap.dedent("""
+        def export(tracer):
+            return ["a"]
+        """))
+    cfg = Config(event_kinds_source="a.py::KINDS",
+                 exporters=["exp.py::export"])
+    vs = run_paths([], cfg, tmp_path)
+    assert codes(vs) == ["PL005"]
+    assert "'b'" in vs[0].message
+
+
+def test_pl005_undocumented_cli_flag(tmp_path):
+    (tmp_path / "cli.py").write_text(textwrap.dedent("""
+        import argparse
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--documented")
+        ap.add_argument("--mystery-knob")
+        """))
+    (tmp_path / "doc.md").write_text("Use `--documented` to do things.\n")
+    cfg = Config(cli_docs=["cli.py=doc.md"])
+    vs = run_paths([], cfg, tmp_path)
+    assert codes(vs) == ["PL005"]
+    assert "--mystery-knob" in vs[0].message
+
+
+# ------------------------------------------------------------------ config
+
+def test_config_parses_real_pyproject():
+    cfg = load_config(REPO_ROOT / "pyproject.toml")
+    assert "src/repro/serving/engine.py" in cfg.engine_files
+    assert "_fetch" in cfg.transfer_wrappers
+    assert "spec_len" in cfg.jit_key_flags
+    assert cfg.mirrors and cfg.exporters and cfg.cli_docs
+
+
+def test_config_rejects_non_string_values():
+    text = "[tool.papilint]\nhot_path = 3\n"
+    with pytest.raises(ConfigError):
+        parse_pyproject(text)
+
+
+def test_config_multiline_arrays():
+    text = textwrap.dedent("""
+        [tool.papilint]
+        hot_path = [
+            "a.py::X.y",
+            "b.py::Z.w",
+        ]
+        """)
+    raw = parse_pyproject(text)
+    assert raw["hot_path"] == ["a.py::X.y", "b.py::Z.w"]
+
+
+# -------------------------------------------------------------- repo gate
+
+def test_repo_lints_clean():
+    """The CI gate: the repo's own src/tools/benchmarks trees carry no
+    unannotated violations under the real [tool.papilint] config."""
+    from tools.papilint.__main__ import main
+    assert main(["src", "tools", "benchmarks"]) == 0
+
+
+def test_bad_fixture_exits_nonzero(tmp_path):
+    from tools.papilint.__main__ import main
+    (tmp_path / "pyproject.toml").write_text(textwrap.dedent("""
+        [tool.papilint]
+        engine_files = ["mod.py"]
+        """))
+    (tmp_path / "mod.py").write_text(textwrap.dedent("""
+        class Engine:
+            def _get_prog(self):
+                return self.fn
+        """))
+    assert main(["mod.py", "--root", str(tmp_path)]) == 1

@@ -1,0 +1,157 @@
+"""Runtime sanitizer (src/repro/debug/sanitize.py):
+
+  * `sanitized()` raises on implicit rank promotion (the model's own
+    broadcasts are all explicit, so the strict mode stays on for whole
+    engine runs);
+  * a `PapiEngine(sanitize=True)` run completes with a report showing
+    steady-state iterations at EXACTLY the transfer budget and zero
+    steady-state recompiles, for both the plain and speculative fused
+    engines — and `sanitize_report()` is None when the gate is off;
+  * `EngineSanitizer.after_step` raises SanitizeError on a steady fused
+    decode iteration whose transfer count exceeds the budget, and on a
+    jit-cache entry that grew a second compiled signature under an
+    existing key (a steady-state retrace);
+  * non-steady iterations (admission waves, prefill chunks, degraded or
+    preempted steps) are exempt from the budget.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.debug import EngineSanitizer, SanitizeError, sanitized
+from repro.models import init_params
+from repro.serving import PapiEngine, ServeRequest
+from repro.serving.engine import IterStats
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, **kw):
+    eng = PapiEngine(cfg, params, max_slots=2, cache_capacity=64,
+                     prefill_len=8, alpha=6.0, eos_token=cfg.vocab_size - 1,
+                     fused=True, sanitize=True, **kw)
+    for i in range(3):
+        eng.submit(ServeRequest(i, [3 + i, 5, 7], max_new_tokens=8))
+    results = eng.run(max_iterations=100)
+    return eng, results
+
+
+def test_sanitized_raises_on_rank_promotion():
+    with sanitized():
+        with pytest.raises(Exception):  # jax raises ValueError/TypeError
+            _ = jnp.ones((4, 8)) + jnp.ones((8,)) * jnp.ones((1, 1, 8))
+    # and the strict context does not leak
+    _ = jnp.ones((4, 1, 8)) + jnp.ones((8,))
+
+
+def test_sanitized_engine_run_meets_budget(small_model):
+    cfg, params = small_model
+    eng, results = _run(cfg, params)
+    assert len(results) == 3
+    rep = eng.sanitize_report()
+    assert rep is not None
+    assert rep.steady_iterations > 0
+    assert rep.transfers_per_steady_iter == rep.transfer_budget == 1
+    assert rep.recompiles == 0
+    assert rep.programs >= 1
+
+
+def test_sanitized_speculative_run_meets_budget(small_model):
+    cfg, params = small_model
+    draft_params = init_params(cfg, jax.random.PRNGKey(9))
+    eng, results = _run(cfg, params, spec_len=3, draft=(cfg, draft_params))
+    assert len(results) == 3
+    rep = eng.sanitize_report()
+    assert rep.steady_iterations > 0
+    assert rep.transfers_per_steady_iter == 1.0
+    assert rep.recompiles == 0
+
+
+def test_report_absent_when_gate_off(small_model):
+    cfg, params = small_model
+    eng = PapiEngine(cfg, params, max_slots=2, cache_capacity=64,
+                     prefill_len=8, alpha=6.0, fused=True)
+    assert eng.sanitize_report() is None
+
+
+# ----------------------------------------------- after_step unit checks
+
+def _stats(transfers, **kw):
+    base = dict(iteration=5, rlp=1, tlp=1, ai_estimate=1.0,
+                fc_variant="pu", new_tokens=1, accepted=1.0, wall_s=0.01,
+                transfers=transfers, decode_slots=1)
+    base.update(kw)
+    return IterStats(**base)
+
+
+class _FakeEngine:
+    fused = True
+
+    def __init__(self, stats, caches=None):
+        self.stats = stats
+        self._decode_jit = caches or {}
+        self._prefill_jit = {}
+
+
+class _FakeJit:
+    def __init__(self, size):
+        self._size = size
+
+    def _cache_size(self):
+        return self._size
+
+
+def test_after_step_flags_budget_overrun():
+    san = EngineSanitizer()
+    with pytest.raises(SanitizeError, match="transfer budget"):
+        san.after_step(_FakeEngine([_stats(transfers=2)]), stepped=True)
+
+
+def test_after_step_exempts_non_steady_iterations():
+    san = EngineSanitizer()
+    # admission waves, prefill chunks, degrades, preemptions: over-budget
+    # transfer counts are all legitimate off the steady state
+    for extra in ({"admitted": 1}, {"arrivals": 1}, {"prefill_slots": 1},
+                  {"degraded": 1}, {"preemptions": 1}):
+        san.after_step(_FakeEngine([_stats(transfers=3, **extra)]),
+                       stepped=True)
+    assert san.report.steady_iterations == 0
+    assert san.report.iterations == 5
+
+
+def test_after_step_flags_steady_state_retrace():
+    san = EngineSanitizer()
+    eng = _FakeEngine([_stats(transfers=1)],
+                      caches={("decode",): _FakeJit(1)})
+    san.after_step(eng, stepped=True)
+    eng._decode_jit[("decode",)] = _FakeJit(2)  # same key, new signature
+    with pytest.raises(SanitizeError, match="retrace"):
+        san.after_step(eng, stepped=True)
+
+
+def test_after_step_counts_programs_across_caches():
+    san = EngineSanitizer()
+    eng = _FakeEngine([_stats(transfers=1)],
+                      caches={("a",): _FakeJit(1), ("b",): _FakeJit(1)})
+    san.after_step(eng, stepped=True)
+    assert san.report.programs == 2
+    assert san.report.steady_iterations == 1
+    assert san.report.steady_transfers == 1
+
+
+def test_report_asdict_round_trip():
+    san = EngineSanitizer()
+    san.after_step(_FakeEngine([_stats(transfers=1)]), stepped=True)
+    d = san.report.asdict()
+    assert d["transfers_per_steady_iter"] == 1.0
+    assert set(d) >= {"transfer_budget", "iterations", "steady_iterations",
+                      "steady_transfers", "recompiles", "programs"}
+    assert dataclasses.asdict(san.report)["steady_iterations"] == 1

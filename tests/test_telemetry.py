@@ -116,10 +116,74 @@ def test_traced_run_vocabulary_and_iteration_order(small_model):
     assert tr.counters["finish:length"] == 3
 
 
-def test_event_kinds_mirror_stays_in_sync():
+def test_event_kinds_mirror_enforced_statically():
     """tools/trace_report.py is stdlib-only so it keeps its OWN copy of the
-    vocabulary — this is the assertion that keeps the two equal."""
-    assert trace_report.EVENT_KINDS == EVENT_KINDS
+    vocabulary.  Enforcement lives in papilint's PL005 mirror checker,
+    which parses both literal sets out of the source (and verifies every
+    configured exporter mentions every kind) — so a drifted copy fails the
+    lint gate before any test imports run.  One equality stays below as
+    the runtime smoke assert."""
+    root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))
+    from tools.papilint import checkers, load_config
+    cfg = load_config(root / "pyproject.toml")
+    assert checkers.check_mirrors(cfg, root) == []
+    assert checkers.check_exporters(cfg, root) == []
+    assert trace_report.EVENT_KINDS == EVENT_KINDS  # runtime smoke
+
+
+def test_all_exporters_cover_every_event_kind(tmp_path):
+    """Emit one event of every vocabulary kind, then check each of the
+    three exporters surfaces all of them: the chrome trace round-trips
+    every kind through load_trace, the jsonl export carries one record
+    per kind, and the prometheus exposition zero-fills a
+    papi_engine_events_total sample for the full vocabulary."""
+    tr = Tracer()
+    emitters = {
+        "submit": dict(req_id=0, prompt_len=3, max_new=4),
+        "admit": dict(req_id=0, slot=0, prompt_len=3),
+        "first_token": dict(req_id=0),
+        "preempt": dict(req_id=1, slot=1, done=2),
+        "finish": dict(req_id=0, reason="length", tokens=4, slot=0),
+        "defer": dict(req_id=2, age=3),
+        "scheduler": dict(ai_estimate=1.0, alpha=6.0, assignment="pim",
+                          flipped=True, rlp=1, tlp=2),
+        "iteration": dict(new_tokens=1, fc_variant="pu"),
+        "pool": dict(used=1, free=7, watermark=2, fragmentation=0.0),
+        "fault": dict(fault="logits_nan"),
+        "degraded": dict(mode="step"),
+        "program": dict(key="decode|spec_len=1"),
+        "page_map": dict(slot=0, pages=2),
+        "page_unmap": dict(slot=0, pages=2, cause="finish"),
+        "page_reserve": dict(slot=0, budget_pages=4, mapped_pages=2),
+        "stall": dict(snapshot={"iteration": 5}),
+    }
+    assert set(emitters) == set(EVENT_KINDS), \
+        "extend this test when the vocabulary grows"
+    for kind, data in emitters.items():
+        tr.emit(kind, iteration=1, **data)
+
+    path = tmp_path / "t.trace.json"
+    write_trace(tr, path, "chrome")
+    events, _summary = trace_report.load_trace(path)
+    assert {ev["kind"] for ev in events} == set(EVENT_KINDS)
+
+    jsonl_kinds = {json.loads(line)["kind"]
+                   for line in export_jsonl(tr).strip().splitlines()}
+    assert jsonl_kinds == set(EVENT_KINDS) | {"summary"}
+
+    samples = dict(re.findall(
+        r'papi_engine_events_total\{kind="([^"]+)"\} (\d+)',
+        export_prometheus(tr)))
+    assert set(samples) == set(EVENT_KINDS)
+    assert all(int(v) == 1 for v in samples.values())
+    # zero-filled even on an empty tracer: the exposition always shows
+    # the full vocabulary
+    empty = dict(re.findall(
+        r'papi_engine_events_total\{kind="([^"]+)"\} (\d+)',
+        export_prometheus(Tracer())))
+    assert set(empty) == set(EVENT_KINDS)
+    assert all(int(v) == 0 for v in empty.values())
 
 
 # ---------------------------------------------------------------- exporters

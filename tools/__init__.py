@@ -1,0 +1,3 @@
+# Marks tools/ as a package so `python -m tools.papilint` resolves from the
+# repo root.  The standalone scripts in this directory (check_bench.py,
+# trace_report.py, ...) are still run as plain files.

@@ -1,6 +1,6 @@
 """BENCH regression gate: fail CI when the tracked benchmark file regresses.
 
-Two checks over BENCH_engine.json (written/merged by
+Checks over BENCH_engine.json (written/merged by
 `benchmarks/engine_hotpath.py`):
 
   1. every ``tokens_bit_identical`` flag, anywhere in the file, is true —
@@ -30,7 +30,18 @@ Two checks over BENCH_engine.json (written/merged by
      from the ring — the regressions this guards are the tracer hooks
      creeping onto the untraced hot path and the traced path growing a
      real per-dispatch cost (its ``tokens_bit_identical`` flag — tracing
-     must never perturb streams — rides check 1).
+     must never perturb streams — rides check 1);
+  6. the ``sanitize`` section (the --sanitize runtime-sanitizer smoke)
+     shows, for every recorded mode, at least one steady-state iteration,
+     EXACTLY ``transfer_budget`` host transfers per steady fused decode
+     iteration, and zero steady-state recompiles — the regressions this
+     guards are an un-batched sync creeping onto the hot path and a flag
+     flip retracing under an existing jit-cache key (the seed bug PL003
+     checks statically).
+
+A missing or truncated section is reported as a named-section failure
+("BENCH section 'X' missing ...") with the engine_hotpath invocation that
+produces it — never as a raw KeyError traceback.
 
 Usage:  python tools/check_bench.py [path/to/BENCH_engine.json]
 Exits non-zero with a message on the first violated check.
@@ -85,6 +96,39 @@ def iter_identity_flags(node, path=""):
             yield from iter_identity_flags(val, f"{path}[{i}]")
 
 
+def get_section(bench, dotted: str, hint: str, failures: list):
+    """Walk a dotted path into the bench dict.
+
+    On the first missing component, append a named-section failure (which
+    component of which section, plus the invocation that writes it) and
+    return None — callers never see a KeyError.
+    """
+    node = bench
+    seen: list[str] = []
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            at = ".".join(seen + [part])
+            failures.append(
+                f"BENCH section '{dotted}' missing ('{at}' not found) — "
+                f"run {hint}")
+            return None
+        seen.append(part)
+        node = node[part]
+    return node
+
+
+def need_keys(section, name: str, keys: list, hint: str,
+              failures: list) -> bool:
+    """Require leaf keys inside an already-located section."""
+    missing = [k for k in keys if k not in section]
+    if missing:
+        failures.append(
+            f"BENCH section '{name}' incomplete (missing "
+            f"{', '.join(missing)}) — run {hint}")
+        return False
+    return True
+
+
 def main() -> int:
     path = Path(sys.argv[1]) if len(sys.argv) > 1 else (
         Path(__file__).resolve().parent.parent / "BENCH_engine.json")
@@ -103,13 +147,12 @@ def main() -> int:
         if ok is not True:
             failures.append(f"{where} is {ok!r} (token streams diverged)")
 
-    try:
-        spec = bench["paged"]["modes"]["speculative"]
+    hint = "benchmarks/engine_hotpath.py --kv paged"
+    spec = get_section(bench, "paged.modes.speculative", hint, failures)
+    if spec is not None and need_keys(
+            spec, "paged.modes.speculative",
+            ["paged_tok_per_s", "dense_tok_per_s"], hint, failures):
         paged, dense = spec["paged_tok_per_s"], spec["dense_tok_per_s"]
-    except KeyError as missing:
-        failures.append(f"paged.modes.speculative section incomplete "
-                        f"(missing {missing})")
-    else:
         if paged < PAGED_SPEC_FLOOR * dense:
             failures.append(
                 f"paged speculative regressed: {paged:.1f} tok/s < "
@@ -120,36 +163,35 @@ def main() -> int:
                   f"{paged / dense:.2f}x dense ({dense:.1f} tok/s), floor "
                   f"{PAGED_SPEC_FLOOR:.2f} — OK")
 
-    try:
-        pressure = bench["pressure"]
+    hint = "benchmarks/engine_hotpath.py --pressure"
+    pressure = get_section(bench, "pressure", hint, failures)
+    if pressure is not None and need_keys(
+            pressure, "pressure",
+            ["completed", "requests", "admission_delay_p99"],
+            hint, failures):
         done, total = pressure["completed"], pressure["requests"]
         p99 = pressure["admission_delay_p99"]
-    except KeyError as missing:
-        failures.append(f"pressure section incomplete or absent "
-                        f"(missing {missing}) — run "
-                        "benchmarks/engine_hotpath.py --pressure")
-    else:
+        ok = True
         if done < total:
             failures.append(f"pressure trace lost requests: {done}/{total} "
                             "completed")
+            ok = False
         if p99 > PRESSURE_DELAY_CEIL:
             failures.append(
                 f"pressure admission delay unbounded: p99 {p99} iterations "
                 f"> ceiling {PRESSURE_DELAY_CEIL} (preemption not relieving "
                 "the deferring head?)")
-        if not failures:
+            ok = False
+        if ok:
             print(f"pressure: {done}/{total} completed, admission delay "
                   f"p99 {p99} <= {PRESSURE_DELAY_CEIL} iterations — OK")
 
-    try:
-        arrivals = bench["arrivals"]
+    hint = "benchmarks/engine_hotpath.py --arrivals 0.5"
+    arrivals = get_section(bench, "arrivals", hint, failures)
+    if arrivals is not None and need_keys(
+            arrivals, "arrivals", ["requests", "modes"], hint, failures):
         total = arrivals["requests"]
         modes = arrivals["modes"]
-    except KeyError as missing:
-        failures.append(f"arrivals section incomplete or absent "
-                        f"(missing {missing}) — run "
-                        "benchmarks/engine_hotpath.py --arrivals 0.5")
-    else:
         bad = False
         for label, mode in sorted(modes.items()):
             done = mode.get("completed", 0)
@@ -170,18 +212,17 @@ def main() -> int:
                   f"worst p99 TTFT {worst:.0f} <= {ARRIVALS_TTFT_CEIL} "
                   "iterations — OK")
         elif not modes:
-            failures.append("arrivals section has no modes")
+            failures.append("BENCH section 'arrivals' has no modes — run "
+                            f"{hint}")
 
-    try:
-        tel = bench["telemetry"]
+    hint = ("benchmarks/engine_hotpath.py --arrivals 0.5 "
+            "--trace trace.telemetry.json")
+    tel = get_section(bench, "telemetry", hint, failures)
+    if tel is not None and need_keys(
+            tel, "telemetry", ["overhead_frac", "events_dropped"],
+            hint, failures):
         overhead = tel["overhead_frac"]
         dropped = tel["events_dropped"]
-    except KeyError as missing:
-        failures.append(f"telemetry section incomplete or absent "
-                        f"(missing {missing}) — run "
-                        "benchmarks/engine_hotpath.py --arrivals 0.5 "
-                        "--trace trace.telemetry.json")
-    else:
         if overhead > TELEMETRY_OVERHEAD_CEIL:
             failures.append(
                 f"tracing overhead regressed: traced median wall "
@@ -197,6 +238,42 @@ def main() -> int:
                   f"(ceiling {TELEMETRY_OVERHEAD_CEIL:.0%}), "
                   f"{tel.get('events', '?')} events, 0 dropped — OK")
 
+    hint = "benchmarks/engine_hotpath.py --sanitize"
+    san = get_section(bench, "sanitize", hint, failures)
+    if san is not None:
+        if not san:
+            failures.append(f"BENCH section 'sanitize' has no modes — run "
+                            f"{hint}")
+        for label, rep in sorted(san.items()):
+            name = f"sanitize.{label}"
+            if not need_keys(rep, name,
+                             ["transfer_budget", "steady_iterations",
+                              "transfers_per_steady_iter", "recompiles"],
+                             hint, failures):
+                continue
+            ok = True
+            if rep["steady_iterations"] <= 0:
+                failures.append(
+                    f"{name}: no steady-state iterations recorded — the "
+                    "sanitized run never reached fused decode-only steps")
+                ok = False
+            if rep["transfers_per_steady_iter"] != rep["transfer_budget"]:
+                failures.append(
+                    f"{name}: {rep['transfers_per_steady_iter']:.2f} host "
+                    f"transfers per steady iteration != budget "
+                    f"{rep['transfer_budget']} — an un-batched sync crept "
+                    "onto the hot path")
+                ok = False
+            if rep["recompiles"] != 0:
+                failures.append(
+                    f"{name}: {rep['recompiles']} steady-state recompiles "
+                    "(a flag flip retraced under an existing jit-cache key)")
+                ok = False
+            if ok:
+                print(f"{name}: {rep['steady_iterations']} steady "
+                      f"iterations at exactly {rep['transfer_budget']} "
+                      "transfer(s)/iter, 0 recompiles — OK")
+
     if failures:
         for f in failures:
             print(f"check_bench FAIL: {f}")
@@ -204,7 +281,7 @@ def main() -> int:
     print(f"check_bench: {len(flags)} identity flags true, paged "
           "speculative above floor, pressure trace bounded, arrivals "
           "trace completed within the TTFT ceiling, telemetry overhead "
-          "under the ceiling")
+          "under the ceiling, sanitize budgets exact")
     return 0
 
 

@@ -1,0 +1,33 @@
+"""papilint: repo-specific static analysis for the PAPI serving engine.
+
+The engine's performance claims rest on invariants no general-purpose
+linter knows about: one host transfer per fused iteration, jit caches
+keyed on every scheduler-visible flag, every dispatch routed through the
+telemetry ``_call`` path, and Pallas grid specs whose index maps agree
+with their grids.  papilint checks those invariants at the AST level so
+regressions are caught before a test ever runs.
+
+Checkers
+--------
+PL001  host-sync-in-hot-path: device syncs (`.item()`, ``jax.device_get``,
+       ``block_until_ready``, ``int()``/``float()``/``bool()`` or
+       ``np.asarray`` on device values) inside the engine's hot path must
+       carry a ``# papilint: allow-transfer(<reason>)`` annotation.
+PL002  dispatch discipline: ``_get_*`` program getters return
+       ``(key, fn)`` and dispatch routes through ``PapiEngine._call``,
+       never a bare ``fn(...)``.
+PL003  jit-cache-key completeness: mutable ``self.<flag>`` reads inside a
+       jitted-program getter must appear in its jit-cache key, and keys
+       not derived from ``_jit_key`` must capture the ambient FC variant
+       (the seed's original bug).
+PL004  Pallas kernel contracts: BlockSpec ``index_map`` arity matches
+       grid rank (+ scalar prefetch), operand counts match the grid
+       spec, ragged clamps are guarded by ``pl.when``.
+PL005  mirror/CLI drift: ``EVENT_KINDS`` mirrors stay equal, exporters
+       cover every event kind, argparse flags are documented.
+
+Run ``python -m tools.papilint src tools benchmarks`` from the repo root.
+Configuration lives in ``[tool.papilint]`` in pyproject.toml.
+"""
+from tools.papilint.config import Config, load_config  # noqa: F401
+from tools.papilint.core import Violation, run_paths  # noqa: F401

@@ -1,0 +1,55 @@
+"""CLI: ``python -m tools.papilint [paths...]`` from the repo root.
+
+Exits 0 when the tree is clean, 1 when any violation (or malformed
+annotation) is found.  Paths default to the CI surface: src, tools,
+benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.papilint.config import ConfigError, load_config
+from tools.papilint.core import run_paths
+
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="papilint",
+        description="repo-specific static analysis for the PAPI engine "
+                    "(PL001 host-sync, PL002 dispatch, PL003 jit keys, "
+                    "PL004 Pallas contracts, PL005 mirror/CLI drift)")
+    parser.add_argument("paths", nargs="*",
+                        default=["src", "tools", "benchmarks"],
+                        help="files or directories to lint "
+                             "(default: src tools benchmarks)")
+    parser.add_argument("--root", type=Path, default=REPO_ROOT,
+                        help="repo root for config + relative paths")
+    parser.add_argument("--config", type=Path, default=None,
+                        help="pyproject.toml holding [tool.papilint] "
+                             "(default: <root>/pyproject.toml)")
+    args = parser.parse_args(argv)
+
+    pyproject = args.config or (args.root / "pyproject.toml")
+    try:
+        config = load_config(pyproject)
+    except (ConfigError, OSError) as exc:
+        print(f"papilint: {exc}", file=sys.stderr)
+        return 1
+
+    violations = run_paths([Path(p) for p in args.paths], config,
+                           args.root)
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"papilint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("papilint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

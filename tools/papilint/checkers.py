@@ -1,0 +1,786 @@
+"""papilint checkers PL001-PL005.
+
+Each per-file checker takes ``(tree, source, relpath, config, annotations)``
+and returns a list of Violations; the cross-file PL005 checks take the
+config and repo root.  All analysis is pure-AST (stdlib only) so the
+suite runs before any dependency is installed.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from tools.papilint.config import Config
+from tools.papilint.core import Annotations, Violation
+
+HOST = "host"
+DEVICE = "device"
+
+_DEVICE_ROOTS = {"jnp", "jax", "lax"}
+_NUMPY_ROOTS = {"np", "numpy"}
+# module-level helpers whose results live on device (greedy() is the
+# engine's argmax-on-device sampler)
+_DEVICE_FNS = {"greedy"}
+_SCALAR_CASTS = {"int", "float", "bool"}
+
+
+def _chain(node: ast.AST) -> tuple[str, ...] | None:
+    """Dotted name chain for Name/Attribute expressions, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """Qualified name ('Class.method' or 'func') -> def node."""
+    out: dict[str, ast.FunctionDef] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out[f"{node.name}.{sub.name}"] = sub
+    return out
+
+
+def _parse_entry(entry: str) -> tuple[str, str]:
+    """Split a 'path::Symbol' config entry."""
+    path, _, symbol = entry.partition("::")
+    return path, symbol
+
+
+def _own_scope(fn) -> list[ast.stmt]:
+    """Statements of fn excluding nested function/class bodies."""
+    out: list[ast.stmt] = []
+    stack = list(fn.body)
+    while stack:
+        st = stack.pop()
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            continue
+        out.append(st)
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.stmt):
+                stack.append(child)
+            elif hasattr(child, "body") and isinstance(
+                    getattr(child, "body", None), list):
+                stack.extend(s for s in child.body
+                             if isinstance(s, ast.stmt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PL001 — host sync in hot path
+# ---------------------------------------------------------------------------
+
+def check_host_sync(tree, source, relpath, cfg: Config, ann: Annotations,
+                    ) -> list[Violation]:
+    entries = [sym for (path, sym) in map(_parse_entry, cfg.hot_path)
+               if path == relpath]
+    if not entries:
+        return []
+    funcs = _functions(tree)
+
+    # transitive closure of self./module-level calls from the entry points
+    def callees(qual: str) -> set[str]:
+        fn = funcs.get(qual)
+        if fn is None:
+            return set()
+        cls = qual.rsplit(".", 1)[0] if "." in qual else None
+        out: set[str] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _chain(node.func)
+            if chain is None:
+                continue
+            if chain[0] == "self" and len(chain) == 2 and cls:
+                target = f"{cls}.{chain[1]}"
+                if target in funcs:
+                    out.add(target)
+            elif len(chain) == 1 and chain[0] in funcs:
+                out.add(chain[0])
+        return out
+
+    hot: set[str] = set()
+    frontier = [e for e in entries if e in funcs]
+    missing = [e for e in entries if e not in funcs]
+    violations = [
+        Violation("PL001", relpath, 1,
+                  f"configured hot-path entry {e!r} not found in file "
+                  "(stale [tool.papilint] hot_path?)")
+        for e in missing]
+    while frontier:
+        qual = frontier.pop()
+        if qual in hot:
+            continue
+        hot.add(qual)
+        frontier.extend(callees(qual) - hot)
+
+    for qual in sorted(hot):
+        violations.extend(_scan_hot_function(funcs[qual], qual, relpath,
+                                             cfg, ann))
+    return violations
+
+
+def _scan_hot_function(fn, qual, relpath, cfg: Config, ann: Annotations,
+                       ) -> list[Violation]:
+    env: dict[str, str | None] = {}
+    violations: list[Violation] = []
+
+    def taint(expr) -> str | None:
+        if isinstance(expr, ast.Name):
+            return env.get(expr.id)
+        if isinstance(expr, ast.Call):
+            chain = _chain(expr.func)
+            if chain is None:
+                return None
+            if chain[0] == "self" and len(chain) == 2:
+                if chain[1] in cfg.transfer_wrappers:
+                    return HOST
+                if chain[1] == cfg.dispatch_fn:
+                    return DEVICE
+                return None
+            if chain[0] in _NUMPY_ROOTS:
+                return HOST
+            if chain[0] in _DEVICE_ROOTS:
+                return HOST if chain[-1] == "device_get" else DEVICE
+            if len(chain) == 1:
+                if chain[0] in _SCALAR_CASTS or chain[0] == "len":
+                    return HOST
+                if chain[0] in _DEVICE_FNS:
+                    return DEVICE
+            return None
+        if isinstance(expr, ast.Attribute):
+            chain = _chain(expr)
+            if chain and chain[0] == "self" and len(chain) >= 2 \
+                    and chain[1] in cfg.host_state_attrs:
+                return HOST
+            return None
+        if isinstance(expr, ast.Subscript):
+            return taint(expr.value)
+        if isinstance(expr, (ast.BinOp, ast.Compare, ast.BoolOp,
+                             ast.UnaryOp, ast.IfExp)):
+            subs = [taint(s) for s in ast.iter_child_nodes(expr)
+                    if isinstance(s, ast.expr)]
+            if DEVICE in subs:
+                return DEVICE
+            if HOST in subs:
+                return HOST
+            return None
+        if isinstance(expr, (ast.Constant, ast.List, ast.ListComp,
+                             ast.Dict, ast.Set)):
+            return HOST
+        return None
+
+    def flag(call: ast.Call, what: str) -> None:
+        if ann.transfer_allowed(call):
+            return
+        violations.append(Violation(
+            "PL001", relpath, call.lineno,
+            f"{what} in hot-path function {qual!r} — add a "
+            "papilint allow-transfer(<reason>) comment if sanctioned"))
+
+    def check_call(call: ast.Call) -> None:
+        chain = _chain(call.func)
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr == "item" and not call.args:
+                flag(call, "host sync: .item() pulls a scalar off device")
+                return
+            if call.func.attr == "block_until_ready":
+                flag(call, "host sync: block_until_ready blocks on device "
+                           "work")
+                return
+        if chain is None:
+            return
+        if chain[0] in _DEVICE_ROOTS and chain[-1] == "device_get":
+            flag(call, "host sync: jax.device_get copies device->host")
+            return
+        if chain[0] == "self" and len(chain) == 2 \
+                and chain[1] in cfg.transfer_wrappers:
+            flag(call, f"sanctioned transfer wrapper self.{chain[1]}()")
+            return
+        if len(chain) == 1 and chain[0] in _SCALAR_CASTS and call.args:
+            if taint(call.args[0]) == DEVICE:
+                flag(call, f"implicit host sync: {chain[0]}() on a device "
+                           "value")
+            return
+        if chain[0] in _NUMPY_ROOTS and chain[-1] in ("asarray", "array") \
+                and call.args:
+            if taint(call.args[0]) == DEVICE:
+                flag(call, f"implicit host sync: {'.'.join(chain)} on a "
+                           "device value")
+
+    def check_expr(expr) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                check_call(node)
+
+    def bind(target, t) -> None:
+        if isinstance(target, ast.Name):
+            env[target.id] = t
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                bind(e, t)
+
+    # statement-ordered scan so taint assignments precede later reads;
+    # compound statements check their header expressions then recurse
+    def visit_block(stmts) -> None:
+        for st in stmts:
+            if isinstance(st, ast.Assign):
+                check_expr(st.value)
+                for tgt in st.targets:
+                    bind(tgt, taint(st.value))
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                check_expr(st.value)
+                bind(st.target, taint(st.value))
+            elif isinstance(st, ast.AugAssign):
+                check_expr(st.value)
+            elif isinstance(st, (ast.For, ast.AsyncFor)):
+                check_expr(st.iter)
+                visit_block(st.body)
+                visit_block(st.orelse)
+            elif isinstance(st, (ast.While, ast.If)):
+                check_expr(st.test)
+                visit_block(st.body)
+                visit_block(st.orelse)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    check_expr(item.context_expr)
+                visit_block(st.body)
+            elif isinstance(st, ast.Try):
+                visit_block(st.body)
+                for h in st.handlers:
+                    visit_block(h.body)
+                visit_block(st.orelse)
+                visit_block(st.finalbody)
+            elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                visit_block(st.body)  # nested closures are still hot
+            else:
+                # Expr / Return / Assert / Raise / Delete / ...
+                check_expr(st)
+
+    visit_block(fn.body)
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# PL002 — dispatch discipline
+# ---------------------------------------------------------------------------
+
+def check_dispatch(tree, source, relpath, cfg: Config, ann: Annotations,
+                   ) -> list[Violation]:
+    if relpath not in cfg.engine_files:
+        return []
+    violations: list[Violation] = []
+    funcs = _functions(tree)
+    for qual, fn in funcs.items():
+        if fn.name.startswith(cfg.getter_prefix):
+            # only the getter's own returns: the nested jitted closures it
+            # builds return device pytrees, not (key, fn) pairs
+            for node in _own_scope(fn):
+                if isinstance(node, ast.Return) and node.value is not None:
+                    ok = (isinstance(node.value, ast.Tuple)
+                          and len(node.value.elts) == 2)
+                    if not ok and not ann.disabled("PL002", node):
+                        violations.append(Violation(
+                            "PL002", relpath, node.lineno,
+                            f"program getter {qual!r} must return a "
+                            "(key, fn) 2-tuple so dispatch can route "
+                            "through self._call"))
+        # bare dispatch of a getter-returned fn
+        fn_vars: dict[str, str] = {}   # fn var -> getter name
+        key_of: dict[str, str] = {}    # fn var -> key var
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            chain = _chain(node.value.func)
+            if not (chain and chain[0] == "self" and len(chain) == 2
+                    and chain[1].startswith(cfg.getter_prefix)):
+                continue
+            if len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Tuple) \
+                    and len(node.targets[0].elts) == 2 \
+                    and all(isinstance(e, ast.Name)
+                            for e in node.targets[0].elts):
+                k, f = node.targets[0].elts
+                fn_vars[f.id] = chain[1]
+                key_of[f.id] = k.id
+        if not fn_vars:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in fn_vars:
+                if not ann.disabled("PL002", node):
+                    violations.append(Violation(
+                        "PL002", relpath, node.lineno,
+                        f"bare dispatch of {fn_vars[node.func.id]!r} "
+                        f"program ({node.func.id}(...)) — route through "
+                        f"self.{cfg.dispatch_fn}(key, fn, ...) so the "
+                        "tracer times it"))
+                continue
+            chain = _chain(node.func)
+            if chain and chain[0] == "self" and len(chain) == 2 \
+                    and chain[1] == cfg.dispatch_fn and len(node.args) >= 2:
+                key_arg, fn_arg = node.args[0], node.args[1]
+                if isinstance(fn_arg, ast.Name) \
+                        and fn_arg.id in key_of \
+                        and isinstance(key_arg, ast.Name) \
+                        and key_arg.id != key_of[fn_arg.id] \
+                        and not ann.disabled("PL002", node):
+                    violations.append(Violation(
+                        "PL002", relpath, node.lineno,
+                        f"program {fn_arg.id!r} dispatched under key "
+                        f"{key_arg.id!r} but its getter returned key "
+                        f"{key_of[fn_arg.id]!r} — timings would be "
+                        "misattributed"))
+    # calling straight out of a jit cache bypasses _call as well
+    for qual, fn in funcs.items():
+        if fn.name.startswith(cfg.getter_prefix) \
+                or fn.name == cfg.dispatch_fn:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Subscript):
+                chain = _chain(node.func.value)
+                if chain and chain[0] == "self" \
+                        and chain[-1].endswith("_jit") \
+                        and not ann.disabled("PL002", node):
+                    violations.append(Violation(
+                        "PL002", relpath, node.lineno,
+                        f"direct call into jit cache "
+                        f"self.{'.'.join(chain[1:])} in {qual!r} — "
+                        "fetch (key, fn) from a getter and route through "
+                        f"self.{cfg.dispatch_fn}"))
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# PL003 — jit-cache-key completeness
+# ---------------------------------------------------------------------------
+
+def _self_paths(node) -> set[str]:
+    """All dotted self.* attribute chains read anywhere under node."""
+    out: set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute):
+            chain = _chain(sub)
+            if chain and chain[0] == "self" and len(chain) > 1:
+                out.add(".".join(chain[1:]))
+    return out
+
+
+def check_jit_keys(tree, source, relpath, cfg: Config, ann: Annotations,
+                   ) -> list[Violation]:
+    if relpath not in cfg.engine_files:
+        return []
+    violations: list[Violation] = []
+    funcs = _functions(tree)
+
+    # atoms contributed by the canonical key builder (_jit_key)
+    builder_atoms: set[str] = set()
+    for qual, fn in funcs.items():
+        if fn.name == cfg.jit_key_builder:
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Return) and node.value is not None:
+                    builder_atoms |= _self_paths(node.value)
+
+    def is_getter(fn) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                chain = _chain(node.func)
+                if chain and chain[-1] == "jit" \
+                        and chain[0] in _DEVICE_ROOTS:
+                    return True
+        return False
+
+    for qual, fn in funcs.items():
+        if not is_getter(fn):
+            continue
+        # locate the cache-key expression: `key = ...`, else the first
+        # element of a returned 2-tuple
+        key_expr = None
+        for st in ast.walk(fn):
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Name) \
+                    and st.targets[0].id == "key":
+                key_expr = st.value
+                break
+        if key_expr is None:
+            for st in ast.walk(fn):
+                if isinstance(st, ast.Return) \
+                        and isinstance(st.value, ast.Tuple) \
+                        and len(st.value.elts) == 2:
+                    key_expr = st.value.elts[0]
+                    break
+        if key_expr is None:
+            continue
+
+        # collect key atoms, resolving local names one assignment deep
+        atoms: set[str] = set()
+        builder_used = False
+        seen: set[str] = set()
+
+        def collect(expr) -> None:
+            nonlocal builder_used
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Attribute):
+                    chain = _chain(node)
+                    if chain and chain[0] == "self" and len(chain) > 1:
+                        atoms.add(".".join(chain[1:]))
+                elif isinstance(node, ast.Call):
+                    chain = _chain(node.func)
+                    if chain is None:
+                        continue
+                    if chain[0] == "self" and len(chain) == 2 \
+                            and chain[1] == cfg.jit_key_builder:
+                        builder_used = True
+                    atoms.add(chain[-1])
+                elif isinstance(node, ast.Name) and node.id not in seen:
+                    seen.add(node.id)
+                    for st in ast.walk(fn):
+                        if isinstance(st, ast.Assign) \
+                                and len(st.targets) == 1 \
+                                and isinstance(st.targets[0], ast.Name) \
+                                and st.targets[0].id == node.id:
+                            collect(st.value)
+                            break
+
+        collect(key_expr)
+        if builder_used:
+            atoms |= builder_atoms
+
+        reads = _self_paths(fn)
+        for flag in list(cfg.jit_key_flags) + list(cfg.jit_key_attr_paths):
+            if flag in reads and flag not in atoms \
+                    and not ann.disabled("PL003", key_expr) \
+                    and not ann.disabled("PL003", fn):
+                violations.append(Violation(
+                    "PL003", relpath, key_expr.lineno,
+                    f"jitted program getter {qual!r} reads self.{flag} "
+                    "but its jit-cache key does not include it — a "
+                    "runtime flip would silently reuse the stale "
+                    "compiled program"))
+        if not builder_used \
+                and not (set(cfg.ambient_key_reads) & atoms) \
+                and not ann.disabled("PL003", key_expr) \
+                and not ann.disabled("PL003", fn):
+            violations.append(Violation(
+                "PL003", relpath, key_expr.lineno,
+                f"jit-cache key in {qual!r} is not derived from "
+                f"self.{cfg.jit_key_builder}() and captures none of "
+                f"{sorted(cfg.ambient_key_reads)} — the seed bug: a key "
+                "blind to the ambient FC variant bakes in whichever "
+                "variant traced first"))
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# PL004 — Pallas kernel contracts
+# ---------------------------------------------------------------------------
+
+def _resolve_int(expr, fn) -> int | None:
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return expr.value
+    return None
+
+
+def _resolve_tuple_len(expr, fn) -> int | None:
+    if isinstance(expr, ast.Tuple):
+        return len(expr.elts)
+    if isinstance(expr, ast.Name):
+        for st in ast.walk(fn):
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Name) \
+                    and st.targets[0].id == expr.id \
+                    and isinstance(st.value, ast.Tuple):
+                return len(st.value.elts)
+    return None
+
+
+def _kw(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _index_map_params(expr, fn, module) -> tuple[int, ast.AST] | None:
+    """(param count, body node) for a lambda or locally-defined index map."""
+    if isinstance(expr, ast.Lambda):
+        return len(expr.args.args), expr.body
+    if isinstance(expr, ast.Name):
+        for scope in (fn, module):
+            for st in ast.walk(scope):
+                if isinstance(st, ast.FunctionDef) and st.name == expr.id:
+                    return len(st.args.args), st
+    return None
+
+
+def _resolve_kernel(expr, fn, module) -> ast.FunctionDef | None:
+    if isinstance(expr, ast.Call):  # functools.partial(kernel, ...)
+        chain = _chain(expr.func)
+        if chain and chain[-1] == "partial" and expr.args:
+            expr = expr.args[0]
+    if isinstance(expr, ast.Name):
+        for scope in (fn, module):
+            for st in ast.walk(scope):
+                if isinstance(st, ast.FunctionDef) and st.name == expr.id:
+                    return st
+    return None
+
+
+def check_pallas(tree, source, relpath, cfg: Config, ann: Annotations,
+                 ) -> list[Violation]:
+    if "BlockSpec" not in source:
+        return []
+    violations: list[Violation] = []
+    module_fns = [n for n in tree.body if isinstance(n, ast.FunctionDef)]
+    for fn in module_fns:
+        pcalls = [n for n in ast.walk(fn)
+                  if isinstance(n, ast.Call)
+                  and isinstance(n.func, ast.Attribute)
+                  and n.func.attr == "pallas_call"]
+        if not pcalls:
+            continue
+        pcall = pcalls[0]
+        spec_calls = [n for n in ast.walk(fn)
+                      if isinstance(n, ast.Call)
+                      and isinstance(n.func, ast.Attribute)
+                      and n.func.attr == "PrefetchScalarGridSpec"]
+        if spec_calls:
+            grid_owner = spec_calls[0]
+            prefetch = _resolve_int(_kw(grid_owner, "num_scalar_prefetch"),
+                                    fn) or 0
+        else:
+            grid_owner = pcall
+            prefetch = 0
+        grid_expr = _kw(grid_owner, "grid")
+        rank = _resolve_tuple_len(grid_expr, fn) \
+            if grid_expr is not None else None
+
+        # index_map arity
+        block_specs = [n for n in ast.walk(fn)
+                       if isinstance(n, ast.Call)
+                       and isinstance(n.func, ast.Attribute)
+                       and n.func.attr == "BlockSpec"]
+        clamped_maps: list[tuple[ast.AST, ast.AST]] = []
+        for bs in block_specs:
+            imap = bs.args[1] if len(bs.args) >= 2 else _kw(bs, "index_map")
+            if imap is None:
+                continue
+            resolved = _index_map_params(imap, fn, tree)
+            if resolved is None:
+                continue
+            nparams, body = resolved
+            if rank is not None:
+                expected = rank + prefetch
+                if nparams != expected and not ann.disabled("PL004", bs):
+                    violations.append(Violation(
+                        "PL004", relpath, bs.lineno,
+                        f"BlockSpec index_map in {fn.name!r} takes "
+                        f"{nparams} parameter(s) but the grid spec "
+                        f"provides {expected} (grid rank {rank} + "
+                        f"{prefetch} scalar-prefetch ref(s))"))
+            for node in ast.walk(body):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in ("minimum", "clip"):
+                    clamped_maps.append((bs, body))
+                    break
+
+        # operand / kernel parameter counts
+        in_specs = _kw(grid_owner, "in_specs")
+        n_in = len(in_specs.elts) if isinstance(in_specs, ast.List) else None
+        out_specs = _kw(grid_owner, "out_specs")
+        n_out = len(out_specs.elts) if isinstance(out_specs, ast.List) \
+            else (1 if out_specs is not None else None)
+        scratch = _kw(grid_owner, "scratch_shapes")
+        n_scratch = len(scratch.elts) if isinstance(scratch, ast.List) else 0
+
+        if spec_calls and n_in is not None:
+            # the pallas_call result is invoked with (scalars..., operands...)
+            outer = [n for n in ast.walk(fn)
+                     if isinstance(n, ast.Call) and n.func is pcall]
+            for call in outer:
+                got = len(call.args)
+                want = prefetch + n_in
+                if got != want and not ann.disabled("PL004", call):
+                    violations.append(Violation(
+                        "PL004", relpath, call.lineno,
+                        f"pallas_call in {fn.name!r} invoked with {got} "
+                        f"operand(s) but the grid spec expects {want} "
+                        f"({prefetch} scalar-prefetch + {n_in} in_specs)"))
+
+        kernel = _resolve_kernel(pcall.args[0] if pcall.args else None,
+                                 fn, tree)
+        if kernel is not None and n_in is not None and n_out is not None:
+            nparams = len(kernel.args.posonlyargs) + len(kernel.args.args)
+            expected = prefetch + n_in + n_out + n_scratch
+            if nparams != expected and not ann.disabled("PL004", kernel):
+                violations.append(Violation(
+                    "PL004", relpath, kernel.lineno,
+                    f"kernel {kernel.name!r} takes {nparams} positional "
+                    f"ref(s) but the grid spec supplies {expected} "
+                    f"({prefetch} scalar-prefetch + {n_in} inputs + "
+                    f"{n_out} outputs + {n_scratch} scratch)"))
+        if clamped_maps and kernel is not None:
+            guarded = any(
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "when"
+                for node in ast.walk(kernel))
+            if not guarded:
+                bs, _ = clamped_maps[0]
+                if not ann.disabled("PL004", bs):
+                    violations.append(Violation(
+                        "PL004", relpath, bs.lineno,
+                        f"index_map in {fn.name!r} clamps its block index "
+                        "(ragged tail) but kernel "
+                        f"{kernel.name!r} has no pl.when guard — the "
+                        "re-fetched tail block would be accumulated "
+                        "twice"))
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# PL005 — mirror / exporter / CLI drift (cross-file)
+# ---------------------------------------------------------------------------
+
+def _module_str_set(root: Path, entry: str,
+                    ) -> tuple[set[str] | None, int, str]:
+    """String constants inside module-level assignment `SYM = ...`."""
+    path, symbol = _parse_entry(entry)
+    file = root / path
+    if not file.exists():
+        return None, 1, f"{path} does not exist"
+    tree = ast.parse(file.read_text(), filename=str(file))
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign):
+            targets = [node.target]
+        else:
+            continue
+        names = [t.id for t in targets if isinstance(t, ast.Name)]
+        if symbol in names:
+            strs = {n.value for n in ast.walk(node.value)
+                    if isinstance(n, ast.Constant)
+                    and isinstance(n.value, str)}
+            return strs, node.lineno, ""
+    return None, 1, f"{path} has no module-level assignment to {symbol}"
+
+
+def check_mirrors(cfg: Config, root: Path) -> list[Violation]:
+    violations: list[Violation] = []
+    for mirror in cfg.mirrors:
+        left, _, right = mirror.partition("=")
+        lset, lline, lerr = _module_str_set(root, left)
+        rset, rline, rerr = _module_str_set(root, right)
+        lpath, lsym = _parse_entry(left)
+        rpath, rsym = _parse_entry(right)
+        if lset is None or rset is None:
+            violations.append(Violation(
+                "PL005", lpath if lset is None else rpath, 1,
+                f"mirror check failed: {lerr or rerr}"))
+            continue
+        if lset != rset:
+            only_l = sorted(lset - rset)
+            only_r = sorted(rset - lset)
+            detail = []
+            if only_l:
+                detail.append(f"only in {lpath}::{lsym}: {only_l}")
+            if only_r:
+                detail.append(f"only in {rpath}::{rsym}: {only_r}")
+            violations.append(Violation(
+                "PL005", rpath, rline,
+                f"mirror drift between {lpath}::{lsym} and "
+                f"{rpath}::{rsym} — " + "; ".join(detail)))
+    return violations
+
+
+def check_exporters(cfg: Config, root: Path) -> list[Violation]:
+    if not cfg.event_kinds_source or not cfg.exporters:
+        return []
+    kinds, _, err = _module_str_set(root, cfg.event_kinds_source)
+    if kinds is None:
+        return [Violation("PL005",
+                          _parse_entry(cfg.event_kinds_source)[0], 1,
+                          f"event-kind source unreadable: {err}")]
+    violations: list[Violation] = []
+    for entry in cfg.exporters:
+        path, func_name = _parse_entry(entry)
+        file = root / path
+        if not file.exists():
+            violations.append(Violation("PL005", path, 1,
+                                        "exporter file missing"))
+            continue
+        tree = ast.parse(file.read_text(), filename=str(file))
+        fn = _functions(tree).get(func_name)
+        if fn is None:
+            violations.append(Violation(
+                "PL005", path, 1,
+                f"configured exporter {func_name!r} not found"))
+            continue
+        mentioned = {n.value for n in ast.walk(fn)
+                     if isinstance(n, ast.Constant)
+                     and isinstance(n.value, str)}
+        missing = sorted(kinds - mentioned)
+        if missing:
+            violations.append(Violation(
+                "PL005", path, fn.lineno,
+                f"exporter {func_name!r} does not handle event kind(s) "
+                f"{missing} — events of those kinds would silently "
+                "vanish from the export"))
+    return violations
+
+
+def check_cli_docs(cfg: Config, root: Path) -> list[Violation]:
+    violations: list[Violation] = []
+    for entry in cfg.cli_docs:
+        cli_path, _, docs_spec = entry.partition("=")
+        doc_paths = [d for d in docs_spec.split(",") if d]
+        cli_file = root / cli_path
+        if not cli_file.exists():
+            violations.append(Violation("PL005", cli_path, 1,
+                                        "configured CLI file missing"))
+            continue
+        docs_text = ""
+        for doc in doc_paths:
+            doc_file = root / doc
+            if not doc_file.exists():
+                violations.append(Violation(
+                    "PL005", cli_path, 1,
+                    f"configured doc {doc!r} missing"))
+            else:
+                docs_text += doc_file.read_text()
+        # the CLI module's own docstring counts as documentation of last
+        # resort only if listed explicitly — flags must live in real docs
+        tree = ast.parse(cli_file.read_text(), filename=str(cli_file))
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "add_argument"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            flag = node.args[0].value
+            if not flag.startswith("--"):
+                continue
+            if flag not in docs_text:
+                violations.append(Violation(
+                    "PL005", cli_path, node.lineno,
+                    f"CLI flag {flag!r} is not mentioned in any of "
+                    f"{doc_paths} — undocumented surface area"))
+    return violations

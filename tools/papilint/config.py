@@ -1,0 +1,133 @@
+"""papilint configuration: the ``[tool.papilint]`` block in pyproject.toml.
+
+Python 3.10 has no ``tomllib``, and papilint must stay stdlib-only (it
+runs in CI before any dependency install), so this module parses the
+narrow TOML subset the config actually uses: a single table of
+``key = "string"`` / ``key = ["string", ...]`` entries, with arrays
+allowed to span lines.  Anything outside that subset is a hard error —
+better a loud parse failure than a silently ignored checker.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+SECTION = "[tool.papilint]"
+
+
+@dataclasses.dataclass
+class Config:
+    """Resolved papilint configuration (all paths repo-relative, POSIX)."""
+
+    # PL001 — entry points whose transitive self-call closure is the hot
+    # path, as "path::Qualified.name" entries.
+    hot_path: list[str] = dataclasses.field(default_factory=list)
+    # PL001 — methods that ARE the sanctioned device->host sync wrapper;
+    # calls to them are flagged and must carry an allow-transfer reason.
+    transfer_wrappers: list[str] = dataclasses.field(default_factory=list)
+    # PL001 — engine attributes known to hold host (numpy/python) state:
+    # int()/float()/np.asarray on them is bookkeeping, not a device sync.
+    host_state_attrs: list[str] = dataclasses.field(default_factory=list)
+    # PL002/PL003 — files holding the dispatch layer.
+    engine_files: list[str] = dataclasses.field(default_factory=list)
+    dispatch_fn: str = "_call"
+    getter_prefix: str = "_get_"
+    # PL003 — mutable flags that must appear in every jit-cache key that
+    # reads them, plus dotted attribute paths treated the same way.
+    jit_key_flags: list[str] = dataclasses.field(default_factory=list)
+    jit_key_attr_paths: list[str] = dataclasses.field(default_factory=list)
+    # PL003 — ambient (thread-local) reads a non-_jit_key-derived key must
+    # capture, and the name of the canonical key builder.
+    ambient_key_reads: list[str] = dataclasses.field(default_factory=list)
+    jit_key_builder: str = "_jit_key"
+    # PL005 — "fileA::SYM=fileB::SYM" literal-equality mirrors.
+    mirrors: list[str] = dataclasses.field(default_factory=list)
+    # PL005 — canonical event-kind set ("file::SYM") and the exporter
+    # functions ("file::func") whose bodies must mention every kind.
+    event_kinds_source: str = ""
+    exporters: list[str] = dataclasses.field(default_factory=list)
+    # PL005 — "cli_file=doc1|doc2": every --flag defined in cli_file must
+    # be mentioned in at least one of the listed docs.
+    cli_docs: list[str] = dataclasses.field(default_factory=list)
+
+
+class ConfigError(ValueError):
+    pass
+
+
+_KEY_RE = re.compile(r"^([A-Za-z0-9_-]+)\s*=\s*(.*)$")
+
+
+def _parse_value(text: str, key: str):
+    """Parse a TOML string / string-or-int array via ast.literal_eval.
+
+    Valid for our subset because TOML double-quoted strings and
+    ``[ ... ]`` arrays of them are also Python literals.
+    """
+    try:
+        value = ast.literal_eval(text)
+    except (ValueError, SyntaxError) as exc:
+        raise ConfigError(
+            f"{SECTION} key {key!r}: unsupported TOML value {text!r} "
+            "(papilint reads only strings and arrays of strings)") from exc
+    if isinstance(value, tuple):
+        value = list(value)
+    if not (isinstance(value, str)
+            or (isinstance(value, list)
+                and all(isinstance(v, str) for v in value))):
+        raise ConfigError(
+            f"{SECTION} key {key!r}: expected a string or array of "
+            f"strings, got {value!r}")
+    return value
+
+
+def parse_pyproject(text: str) -> dict:
+    """Extract the raw [tool.papilint] table from pyproject.toml text."""
+    lines = text.splitlines()
+    try:
+        start = next(i for i, ln in enumerate(lines)
+                     if ln.strip() == SECTION)
+    except StopIteration:
+        raise ConfigError(
+            f"pyproject.toml has no {SECTION} section — papilint is "
+            "unconfigured") from None
+    raw: dict = {}
+    i = start + 1
+    while i < len(lines):
+        line = lines[i].strip()
+        if line.startswith("["):  # next table
+            break
+        if not line or line.startswith("#"):
+            i += 1
+            continue
+        m = _KEY_RE.match(line)
+        if m is None:
+            raise ConfigError(f"{SECTION}: cannot parse line {i + 1}: "
+                              f"{line!r}")
+        key, value_text = m.group(1), m.group(2)
+        # arrays may span lines: accumulate until brackets balance
+        while value_text.count("[") > value_text.count("]"):
+            i += 1
+            if i >= len(lines):
+                raise ConfigError(f"{SECTION} key {key!r}: unterminated "
+                                  "array")
+            value_text += " " + lines[i].strip()
+        # strip trailing comments outside strings (our subset: a '#' that
+        # follows the closing bracket/quote)
+        raw[key] = _parse_value(value_text, key)
+        i += 1
+    return raw
+
+
+def load_config(pyproject: Path) -> Config:
+    raw = parse_pyproject(pyproject.read_text())
+    fields = {f.name: f for f in dataclasses.fields(Config)}
+    kwargs = {}
+    for key, value in raw.items():
+        name = key.replace("-", "_")
+        if name not in fields:
+            raise ConfigError(f"{SECTION}: unknown key {key!r}")
+        kwargs[name] = value
+    return Config(**kwargs)

@@ -1,0 +1,124 @@
+"""papilint core: violations, annotation parsing, and the file walker."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+from tools.papilint.config import Config
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    code: str       # "PL001".."PL005" (PL000 = malformed annotation)
+    path: str       # repo-relative POSIX path
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+# --- annotation grammar ----------------------------------------------------
+#
+#   ``papilint: allow-transfer(<reason>)`` comment  sanctions a PL001 site
+#   ``papilint: disable=PL00N (<reason>)`` comment  suppresses one finding
+#
+# An annotation applies to the statement it trails OR the statement on the
+# next line (own-line comment above a call).  The reason is mandatory: a
+# sanctioned sync without a recorded why is itself a violation.
+
+_ALLOW_RE = re.compile(r"#\s*papilint:\s*allow-transfer\(([^)]*)\)")
+_DISABLE_RE = re.compile(
+    r"#\s*papilint:\s*disable=(PL\d{3})\s*(?:\(([^)]*)\))?")
+_ANY_RE = re.compile(r"#\s*papilint:")
+
+
+class Annotations:
+    """Per-file papilint annotations, keyed by source line."""
+
+    def __init__(self, source: str, relpath: str):
+        self.relpath = relpath
+        self.allow_transfer: dict[int, str] = {}
+        self.disable: dict[int, tuple[str, str]] = {}
+        self.malformed: list[Violation] = []
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = _ALLOW_RE.search(text)
+            if m:
+                reason = m.group(1).strip()
+                if not reason:
+                    self.malformed.append(Violation(
+                        "PL000", relpath, lineno,
+                        "allow-transfer annotation needs a reason in "
+                        "parentheses: why is this sync sanctioned?"))
+                else:
+                    self.allow_transfer[lineno] = reason
+                continue
+            m = _DISABLE_RE.search(text)
+            if m:
+                code, reason = m.group(1), (m.group(2) or "").strip()
+                if not reason:
+                    self.malformed.append(Violation(
+                        "PL000", relpath, lineno,
+                        f"disable={code} annotation needs a reason in "
+                        "parentheses: why is this finding suppressed?"))
+                else:
+                    self.disable[lineno] = (code, reason)
+                continue
+            if _ANY_RE.search(text):
+                self.malformed.append(Violation(
+                    "PL000", relpath, lineno,
+                    "unrecognized papilint annotation (grammar: "
+                    "allow-transfer(<reason>) or disable=PL00N (<reason>))"))
+
+    @staticmethod
+    def _covers(lines: dict, node: ast.AST) -> bool:
+        lo = node.lineno - 1  # own-line comment directly above
+        hi = getattr(node, "end_lineno", node.lineno)
+        return any(lo <= ln <= hi for ln in lines)
+
+    def transfer_allowed(self, node: ast.AST) -> bool:
+        return self._covers(self.allow_transfer, node)
+
+    def disabled(self, code: str, node: ast.AST) -> bool:
+        lines = {ln: None for ln, (c, _) in self.disable.items()
+                 if c == code}
+        return self._covers(lines, node)
+
+
+def run_paths(paths: list[Path], config: Config, root: Path,
+              ) -> list[Violation]:
+    """Lint every .py file under the given paths (files or directories)."""
+    from tools.papilint import checkers
+
+    files: list[Path] = []
+    for p in paths:
+        p = p if p.is_absolute() else root / p
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    violations: list[Violation] = []
+    for path in files:
+        relpath = path.relative_to(root).as_posix() \
+            if path.is_relative_to(root) else path.as_posix()
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError as exc:
+            violations.append(Violation(
+                "PL000", relpath, exc.lineno or 1,
+                f"file does not parse: {exc.msg}"))
+            continue
+        ann = Annotations(source, relpath)
+        violations.extend(ann.malformed)
+        for check in (checkers.check_host_sync, checkers.check_dispatch,
+                      checkers.check_jit_keys, checkers.check_pallas):
+            violations.extend(check(tree, source, relpath, config, ann))
+    # repo-level (cross-file) checks
+    violations.extend(checkers.check_mirrors(config, root))
+    violations.extend(checkers.check_exporters(config, root))
+    violations.extend(checkers.check_cli_docs(config, root))
+    violations.sort(key=lambda v: (v.path, v.line, v.code))
+    return violations
