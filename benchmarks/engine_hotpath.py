@@ -86,12 +86,24 @@ per-iteration wall (the overhead_frac `tools/check_bench.py` gates at
 TELEMETRY_OVERHEAD_CEIL) plus a tokens_bit_identical flag proving the
 observation layer never perturbs the streams.
 
+``--crash-recovery`` gates the durability layer (`serving/journal.py`):
+each serving combo — greedy/speculative x dense/paged — runs against a
+write-ahead journal, is killed mid-trace by the deterministic `crash`
+fault at several iterations k, and a FRESH engine `restore()`s from the
+journal and completes the trace.  The union of pre-crash durable finishes
+(reconstructed from the journal alone) and post-crash results must cover
+every request exactly once with token streams bit-identical to an
+uninterrupted oracle run.  Merges a "recovery" section into
+BENCH_engine.json (`tools/check_bench.py` gates completion, identity, and
+zero duplicate finishes) and exits 1 on any divergence.
+
 Usage:  PYTHONPATH=src python benchmarks/engine_hotpath.py [--spec-len 4]
         PYTHONPATH=src python benchmarks/engine_hotpath.py --mesh 1,8
         PYTHONPATH=src python benchmarks/engine_hotpath.py --kv paged
         PYTHONPATH=src python benchmarks/engine_hotpath.py --long-prompt
         PYTHONPATH=src python benchmarks/engine_hotpath.py --pressure
         PYTHONPATH=src python benchmarks/engine_hotpath.py --arrivals 0.5
+        PYTHONPATH=src python benchmarks/engine_hotpath.py --crash-recovery
 """
 from __future__ import annotations
 
@@ -212,6 +224,15 @@ def main() -> int:
                          "under a live Tracer, write the Chrome trace to "
                          "PATH, and merge a 'telemetry' section (traced vs "
                          "untraced throughput + bit-identity) into --out")
+    ap.add_argument("--crash-recovery", action="store_true",
+                    help="durability gate: run greedy/speculative x "
+                         "dense/paged against a write-ahead journal, kill "
+                         "each with the deterministic 'crash' fault at "
+                         "several iterations, restore() a fresh engine from "
+                         "the journal, and require the union of pre/post-"
+                         "crash streams to match the uninterrupted oracle "
+                         "exactly-once; merges a 'recovery' section into "
+                         "--out and exits 1 on any divergence")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the plain-fused and speculative-fused engines "
                          "under the runtime sanitizer (transfer-guard allow-"
@@ -229,12 +250,12 @@ def main() -> int:
 
     if sum((bool(args.mesh), args.kv == "paged", args.long_prompt,
             args.pressure, args.arrivals is not None,
-            args.sanitize)) > 1:
+            args.sanitize, args.crash_recovery)) > 1:
         # each mode is its own early-returning A/B section; combining them
         # would silently skip the other mode's identity gate
         print("--mesh / --kv paged / --long-prompt / --pressure / --arrivals "
-              "/ --sanitize are separate A/B modes: run one per invocation "
-              "(each merges its own section into --out)")
+              "/ --sanitize / --crash-recovery are separate A/B modes: run "
+              "one per invocation (each merges its own section into --out)")
         return 2
 
     # mesh sizing must precede the first jax backend touch
@@ -290,6 +311,113 @@ def main() -> int:
                   f"(budget {rep['transfer_budget']}), {rep['programs']} "
                   f"programs, {rep['recompiles']} steady-state recompiles")
         print(f"wrote {out}")
+        return 0
+
+    if args.crash_recovery:
+        # Durability gate: crash each serving combo mid-trace at several
+        # iterations k (deterministic `crash` fault), restore a FRESH
+        # engine from the write-ahead journal, and require the union of
+        # pre-crash durable finishes (reconstructed from the journal
+        # alone) + post-crash results to cover every request exactly once,
+        # bit-identical to the uninterrupted oracle.
+        import tempfile
+
+        from repro.serving import (EngineCrashError, FaultInjector,
+                                   PapiEngine, ServeRequest, recover)
+
+        eos = cfg.vocab_size - 1      # never fires with random-init weights
+        crash_points = (2, 6, 11)
+        n_requests = 5
+
+        def build(spec_len, paged, submit=True, **kw):
+            d = dict(max_slots=4, cache_capacity=64, prefill_len=8,
+                     alpha=6.0, eos_token=eos, spec_len=1,
+                     debug_invariants=True)
+            if spec_len > 1:
+                d.update(spec_len=spec_len, draft=(cfg, draft_params))
+            if paged:
+                d.update(kv_layout="paged", page_size=args.page_size)
+            d.update(kw)
+            eng = PapiEngine(cfg, params, **d)
+            if submit:
+                for i in range(n_requests):
+                    eng.submit(ServeRequest(i, [3 + i, 5, 7],
+                                            max_new_tokens=8 + 2 * i))
+            return eng
+
+        section = {"crash_points": list(crash_points), "modes": {}}
+        failures: list[str] = []
+        combos = {"greedy_dense": (1, False),
+                  "spec_dense": (args.spec_len, False),
+                  "greedy_paged": (1, True),
+                  "spec_paged": (args.spec_len, True)}
+        with tempfile.TemporaryDirectory() as td:
+            for name, (spec_len, paged) in combos.items():
+                oracle_eng = build(spec_len, paged)
+                oracle = {r.req_id: r.tokens
+                          for r in oracle_eng.run(max_iterations=400)}
+                dup_total = resumed_total = torn_total = 0
+                completed = identical = True
+                for k in crash_points:
+                    wal = str(Path(td) / f"{name}_{k}.wal")
+                    eng = build(spec_len, paged, journal=wal,
+                                faults=FaultInjector(seed=0, crash_p=1.0,
+                                                     start=k, stop=k + 1))
+                    try:
+                        eng.run(max_iterations=400)
+                        failures.append(
+                            f"{name} k={k}: crash fault never fired")
+                        continue
+                    except EngineCrashError:
+                        pass
+                    # pre-crash durable finishes, from the journal ALONE
+                    durable = {rid: f.tokens for rid, f in
+                               recover(wal, eos_token=eos).finished.items()}
+                    fresh = build(spec_len, paged, submit=False, journal=wal)
+                    info = fresh.restore(wal)
+                    resumed_total += info["resumed"]
+                    torn_total += info["torn_bytes"]
+                    after = {r.req_id: r.tokens
+                             for r in fresh.run(max_iterations=400)}
+                    dups = sorted(set(durable) & set(after))
+                    dup_total += len(dups)
+                    if dups:
+                        failures.append(f"{name} k={k}: duplicate finishes "
+                                        f"for req(s) {dups}")
+                    union = dict(durable)
+                    union.update(after)
+                    if set(union) != set(oracle):
+                        completed = False
+                        failures.append(
+                            f"{name} k={k}: lost request(s) "
+                            f"{sorted(set(oracle) - set(union))}")
+                    elif union != oracle:
+                        identical = False
+                        bad = sorted(r for r in oracle
+                                     if union[r] != oracle[r])
+                        failures.append(f"{name} k={k}: stream(s) diverged "
+                                        f"from oracle for req(s) {bad}")
+                section["modes"][name] = {
+                    "requests": n_requests,
+                    "completed": completed,
+                    "duplicate_finishes": dup_total,
+                    "tokens_bit_identical": identical and completed,
+                    "resumed_requests_total": resumed_total,
+                    "torn_bytes_total": torn_total,
+                }
+                print(f"crash-recovery {name}: crashes at {crash_points}, "
+                      f"{resumed_total} resumed, {dup_total} duplicate "
+                      f"finishes, union identical: "
+                      f"{identical and completed}")
+        out = Path(args.out)
+        results = json.loads(out.read_text()) if out.exists() else {}
+        results["recovery"] = section
+        out.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"wrote {out}")
+        if failures:
+            for f in failures:
+                print(f"crash-recovery FAILED: {f}")
+            return 1
         return 0
 
     if args.long_prompt:

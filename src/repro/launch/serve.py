@@ -41,8 +41,18 @@ Failure model: ``--deadline S`` bounds every request's wall clock (expired
 requests finish with ``finished_reason="timeout"`` and their tokens-so-far),
 and ``--fault kind[:prob]`` (repeatable; ``--fault-seed``) injects a
 deterministic schedule of admission failures / NaN logits / kernel
-corruption / step latency to exercise the engine's graceful-degradation
-paths — see docs/ARCHITECTURE.md, "Failure model & graceful degradation".
+corruption / step latency / engine crashes to exercise the engine's
+graceful-degradation paths — see docs/ARCHITECTURE.md, "Failure model &
+graceful degradation".
+
+Durability: ``--journal PATH`` write-ahead-journals every submit / admit /
+token commit / finish to PATH (append-only, checksummed records), and
+``--resume PATH`` cold-starts the engine from a journal or snapshot left
+by a crashed run — every unfinished request re-admits as
+``prompt + committed-tokens`` and its stream continues bit-identically
+(deadlines resume with their remaining budget).  Crash one run with
+``--journal wal.j --fault crash:0.05``, then recover it with
+``--journal wal.j --resume wal.j``.
 
 Continuous batching: ``--arrivals RATE`` turns the trace into a LIVE
 Poisson arrival stream served by `PapiEngine.serve` — requests are admitted
@@ -97,11 +107,13 @@ def main() -> None:
     ap.add_argument("--fault", action="append", default=[],
                     metavar="KIND[:PROB]",
                     help="inject a deterministic fault schedule (repeatable): "
-                         "kinds admit / nan / kernel / latency, per-iteration "
-                         "probability PROB (default 1.0).  E.g. "
-                         "'--fault nan:0.2 --fault admit:0.5'.  The engine "
-                         "degrades gracefully instead of emitting garbage — "
-                         "see docs/ARCHITECTURE.md, 'Failure model'")
+                         "kinds admit / nan / kernel / latency / crash, "
+                         "per-iteration probability PROB (default 1.0).  "
+                         "E.g. '--fault nan:0.2 --fault admit:0.5'.  The "
+                         "engine degrades gracefully instead of emitting "
+                         "garbage ('crash' kills it mid-trace — recover "
+                         "with --journal + --resume) — see "
+                         "docs/ARCHITECTURE.md, 'Failure model'")
     ap.add_argument("--sanitize", action="store_true",
                     help="run under the tracing-discipline sanitizer "
                          "(repro.debug.sanitize): transfer-guard around "
@@ -134,6 +146,19 @@ def main() -> None:
                          "level (deferral=DEBUG, preemption/unhappy "
                          "finishes=INFO, degraded steps=WARNING, "
                          "stalls=ERROR)")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal: append-only "
+                         "checksummed records (submit/admit/token-commit/"
+                         "finish/cancel/preempt) to PATH, torn tail "
+                         "auto-truncated on reopen; a crashed run recovers "
+                         "with --resume PATH and its streams continue "
+                         "bit-identically")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="cold-start recovery: re-admit every unfinished "
+                         "request from the journal or engine snapshot at "
+                         "PATH (finished requests are never re-run; "
+                         "deadlines keep their remaining budget) and serve "
+                         "them instead of generating a fresh trace")
     ap.add_argument("--arrivals", type=float, default=None, metavar="RATE",
                     help="continuous-batching mode: the trace arrives LIVE "
                          "as a seeded Poisson process (RATE requests per "
@@ -164,8 +189,8 @@ def main() -> None:
     from repro.core.traces import generate_trace
     from repro.launch.mesh import make_serving_mesh
     from repro.models import init_params
-    from repro.serving import (PapiEngine, ServeRequest, Tracer,
-                               export_prometheus, parse_fault_specs,
+    from repro.serving import (EngineCrashError, PapiEngine, ServeRequest,
+                               Tracer, export_prometheus, parse_fault_specs,
                                write_trace)
 
     mesh = None
@@ -196,8 +221,14 @@ def main() -> None:
         kv_layout=args.kv, page_size=args.page_size,
         max_blocks=args.max_blocks,
         faults=parse_fault_specs(args.fault, seed=args.fault_seed),
-        tracer=tracer, sanitize=args.sanitize,
+        tracer=tracer, sanitize=args.sanitize, journal=args.journal,
     )
+    if args.resume:
+        info = eng.restore(args.resume)
+        print(f"resumed {info['resumed']} unfinished request(s) from "
+              f"{args.resume} ({info['finished']} already finished"
+              + (f", {info['torn_bytes']} torn byte(s) discarded"
+                 if info["torn_bytes"] else "") + ")")
     rng = np.random.default_rng(args.seed)
     # Prompts are no longer clamped to the prefill window — admission chunks
     # any prompt through it (32 tokens/wave here).  The cap below only keeps
@@ -206,25 +237,47 @@ def main() -> None:
     # serves the same lengths from the pooled pages.
     max_prompt = 256 - 64 - max(args.spec_len, 1) - 1
     reqs = []
-    for i, req in enumerate(generate_trace(args.task, args.requests,
-                                           args.seed)):
-        prompt = rng.integers(3, cfg.vocab_size,
-                              size=min(req.input_len, max_prompt))
-        reqs.append(ServeRequest(i, prompt.tolist(),
-                                 max_new_tokens=min(req.output_len, 64),
-                                 deadline_s=args.deadline))
+    if not args.resume:
+        # a resumed run serves the recovered queue only: the crashed run
+        # already journaled this trace's submits, and re-generating it
+        # would collide with the recovered req_ids
+        for i, req in enumerate(generate_trace(args.task, args.requests,
+                                               args.seed)):
+            prompt = rng.integers(3, cfg.vocab_size,
+                                  size=min(req.input_len, max_prompt))
+            reqs.append(ServeRequest(i, prompt.tolist(),
+                                     max_new_tokens=min(req.output_len, 64),
+                                     deadline_s=args.deadline))
+
+    try:
+        results = _run_trace(args, eng, reqs, rng)
+    except EngineCrashError as exc:
+        print(f"\nengine crashed (injected) at iteration {exc.iteration}"
+              + (f"; recover with --resume {args.journal}" if args.journal
+                 else " — run with --journal PATH to make crashes "
+                      "recoverable"))
+        raise SystemExit(1)
+    _report(args, eng, results, tracer)
+
+
+def _run_trace(args, eng, reqs, rng) -> list:
+    import numpy as np
+
+    from repro.serving import ServeRequest
 
     if args.arrivals is not None:
         # live mode: Poisson arrivals on the iteration clock, streamed
-        # through the continuous-batching serve loop
+        # through the continuous-batching serve loop (a resumed run has an
+        # empty arrival schedule — serve() just drains the recovered queue)
         from repro.serving import latency_summary
-        arrive = np.cumsum(np.floor(
-            rng.exponential(1.0 / max(args.arrivals, 1e-9),
-                            len(reqs))).astype(int))
-        sched: list[list[ServeRequest]] = [[] for _ in
-                                           range(int(arrive[-1]) + 1)]
-        for r, it in zip(reqs, arrive):
-            sched[int(it)].append(r)
+        sched: list[list[ServeRequest]] = [[]]
+        if reqs:
+            arrive = np.cumsum(np.floor(
+                rng.exponential(1.0 / max(args.arrivals, 1e-9),
+                                len(reqs))).astype(int))
+            sched = [[] for _ in range(int(arrive[-1]) + 1)]
+            for r, it in zip(reqs, arrive):
+                sched[int(it)].append(r)
         results = []
         streamed = 0
         for ev in eng.serve(sched, max_iterations=2000):
@@ -251,10 +304,13 @@ def main() -> None:
                 unit = "iters" if field.endswith("iters") else "s"
                 print(f"  {field:17s} p50 {st['p50']:9.3f}  "
                       f"p99 {st['p99']:9.3f}  ({unit})")
-    else:
-        for r in reqs:
-            eng.submit(r)
-        results = eng.run(max_iterations=2000)
+        return results
+    for r in reqs:
+        eng.submit(r)
+    return eng.run(max_iterations=2000)
+
+
+def _report(args, eng, results, tracer) -> None:
     by_reason: dict[str, int] = {}
     for r in results:
         by_reason[r.finished_reason] = by_reason.get(r.finished_reason, 0) + 1

@@ -190,6 +190,8 @@ from repro.models import (cache_shardings, decode_step, init_cache,
 from repro.models.layers import attn_impl
 from repro.models.linear import current_fc_interpret, current_fc_variant, fc_variant
 from repro.serving.faults import FAULT_INF, FAULT_NAN, FAULT_NONE, FaultInjector
+from repro.serving.journal import (SNAPSHOT_VERSION, Journal, recover,
+                                   write_snapshot)
 from repro.serving.kv_pages import PagedKVManager
 from repro.serving.sampler import accept_speculative, greedy
 from repro.serving.telemetry import NULL_TRACER, Tracer
@@ -273,6 +275,17 @@ class EngineStallError(RuntimeError):
     def __init__(self, message: str, snapshot: dict):
         super().__init__(message)
         self.snapshot = snapshot
+
+
+class EngineCrashError(RuntimeError):
+    """A `crash` fault fired: the engine dies at the top of the iteration,
+    exactly like a process kill — no results emitted, no pages drained,
+    no journal finalization.  Recovery cold-starts a fresh engine and
+    `restore()`s from the journal/snapshot (see serving/journal.py)."""
+
+    def __init__(self, message: str, iteration: int):
+        super().__init__(message)
+        self.iteration = iteration
 
 
 class AllocatorInvariantError(RuntimeError):
@@ -363,6 +376,7 @@ class PapiEngine:
         debug_invariants: bool = False,
         tracer: Tracer | None = None,
         sanitize: bool = False,
+        journal: Journal | str | None = None,
     ) -> None:
         assert cfg.has_decode_step, f"{cfg.name} is encoder-only"
         assert kv_layout in ("dense", "paged"), kv_layout
@@ -477,6 +491,21 @@ class PapiEngine:
         self._admit_t: dict[int, float] = {}
         self._first_tok_t: dict[int, float] = {}
         self.first_token_iteration: dict[int, int] = {}
+        # --- durability (serving/journal.py) ---
+        # write-ahead journal: a path opens (and torn-tail-truncates) a
+        # Journal with the default flush policy; pass a Journal instance to
+        # choose the policy.  _journal_done tracks tokens already journaled
+        # per req_id so the end-of-step flush appends only deltas.
+        if journal is None or isinstance(journal, Journal):
+            self.journal: Journal | None = journal
+        else:
+            self.journal = Journal(journal)
+        self._journal_done: dict[int, int] = {}
+        if self.journal is not None and self.tracer.enabled:
+            self.tracer.emit("journal", 0, op="open",
+                             path=str(self.journal.path),
+                             records=self.journal.records_kept,
+                             truncated_bytes=self.journal.truncated_bytes)
         # --- continuous batching (serve()) ---
         # prompt tokens prefilled so far per slot; a slot is MID-PREFILL
         # while slot_offset < slot_prompt (only possible under serve(),
@@ -521,6 +550,11 @@ class PapiEngine:
         self.queue.append(req)
         self._submit_t.setdefault(req.req_id, self._now())
         self.submit_iteration.setdefault(req.req_id, self.iteration)
+        if self.journal is not None:
+            self.journal.append("submit", req_id=req.req_id,
+                                prompt=list(req.prompt),
+                                max_new=int(req.max_new_tokens),
+                                dl=req.deadline_s)
         if self.tracer.enabled:
             self.tracer.emit("submit", self.iteration, req_id=req.req_id,
                              prompt_len=len(req.prompt),
@@ -579,12 +613,18 @@ class PapiEngine:
 
         Iteration exhaustion aborts in-flight requests honestly
         (``finished_reason="aborted"``, final events still delivered) —
-        same contract as ``run()``.
+        same contract as ``run()``.  Closing the generator early (a
+        ``break``, ``close()``, or GC) does the same from its ``finally``:
+        in-flight slots finish as "aborted" (results in ``self.results``;
+        no events can be yielded during GeneratorExit), the page pool
+        drains, queued requests stay queued, and the engine remains
+        usable for a subsequent ``submit()`` + ``run()``.
         """
         arrivals = iter(arrivals)
         streamed: dict[int, int] = {}   # req_id -> tokens already yielded
         reported = len(self.results)    # results already turned into events
         stream_open = True
+        completed = False
         prev = self.stream_chunks
         self.stream_chunks = True
         try:
@@ -603,11 +643,13 @@ class PapiEngine:
                             self.submit(req)
                         self._arrived_this_step = len(got)
                 if not stream_open and not (self.queue or self.active_slots):
+                    completed = True
                     return
                 if self.iteration >= max_iterations:
                     for s in list(self.active_slots):
                         self._finish_slot(s, "aborted")
                     yield from self._drain_events(streamed, reported)
+                    completed = True
                     return
                 self.step()
                 # live slots first (mid-flight tokens), then finished
@@ -627,6 +669,16 @@ class PapiEngine:
                 reported = new_reported
         finally:
             self.stream_chunks = prev
+            if not completed:
+                # the caller broke out of / close()d the generator
+                # mid-stream: finish the in-flight slots honestly
+                # ("aborted", tokens-so-far) so the page pool drains and
+                # the engine stays reusable for a later submit()+run().
+                # No events can be yielded during GeneratorExit — the
+                # aborted ServeResults land in self.results instead.
+                # Queued requests stay queued, same contract as run().
+                for s in list(self.active_slots):
+                    self._finish_slot(s, "aborted")
 
     def _drain_events(self, streamed: dict[int, int], reported: int):
         """Final-event tail for every result appended since `reported`:
@@ -648,13 +700,145 @@ class PapiEngine:
         for i, req in enumerate(self.queue):
             if req.req_id == req_id:
                 self.queue.pop(i)
+                self._journal_cancel(req_id)
                 self._emit(req, [], "cancelled")
                 return True
         for s in self.active_slots:
             if self.slot_req[s].req_id == req_id:
+                self._journal_cancel(req_id)
                 self._finish_slot(s, "cancelled")
                 return True
         return False
+
+    def _journal_cancel(self, req_id: int) -> None:
+        if self.journal is not None:
+            self.journal.append("cancel", req_id=req_id, it=self.iteration)
+
+    # ----------------------------------------------------------- durability
+    def _journal_commits(self) -> None:
+        """End-of-step WAL flush: one commit record (delta tokens, total,
+        remaining token budget, remaining deadline) per live slot that
+        committed tokens this iteration.  Runs before `serve()` yields the
+        step's TokenEvents, so a streamed token is always at least as
+        durable as the journal's flush policy."""
+        now = self._now()
+        for s in self.active_slots:
+            req = self.slot_req[s]
+            done = req.done if isinstance(req, _ResumedRequest) else []
+            full = list(done) + self.slot_tokens[s]
+            prev = self._journal_done.get(req.req_id, 0)
+            if len(full) <= prev:
+                continue
+            dl = getattr(req, "deadline_s", None)
+            rem_dl = None
+            if dl is not None:
+                t0 = self._submit_t.get(req.req_id)
+                rem_dl = dl if t0 is None else dl - (now - t0)
+            self.journal.append(
+                "commit", req_id=req.req_id, toks=full[prev:], n=len(full),
+                rem=int(self.slot_budget[s]) - len(self.slot_tokens[s]),
+                dl=rem_dl, it=self.iteration)
+            self._journal_done[req.req_id] = len(full)
+
+    def snapshot(self, path: str | None = None) -> dict:
+        """Host-side logical state only — queue order, per-request
+        ``(prompt, committed tokens, remaining token budget, remaining
+        deadline)``, the admission counter — NEVER device arrays: the KV
+        cache, block tables, and jit caches are all recomputable, because
+        `restore()` re-admits unfinished work through the `_ResumedRequest`
+        path and chunked prefill rebuilds the KV bit-identically.
+        Unfinished work is listed in recovery order: in-flight slots
+        (oldest admission first), then the queue.  Deadlines are stored as
+        the REMAINING monotonic delta so a restart neither resets nor
+        instantly expires them.  With `path`, also writes the snapshot
+        atomically (see `journal.write_snapshot`)."""
+        now = self._now()
+
+        def rem_dl(req):
+            dl = getattr(req, "deadline_s", None)
+            if dl is None:
+                return None
+            t0 = self._submit_t.get(req.req_id)
+            return dl if t0 is None else dl - (now - t0)
+
+        def entry(req, emitted, rem):
+            if isinstance(req, _ResumedRequest):
+                prompt = req.prompt[:req.orig_prompt_len]
+                plen = req.orig_prompt_len
+                done = list(req.done) + list(emitted)
+            else:
+                prompt, plen = list(req.prompt), len(req.prompt)
+                done = list(emitted)
+            return {"req_id": req.req_id, "prompt": list(prompt),
+                    "done": done, "max_new": int(rem),
+                    "deadline_s": rem_dl(req), "orig_prompt_len": plen}
+
+        requests = [entry(self.slot_req[s], self.slot_tokens[s],
+                          int(self.slot_budget[s]) - len(self.slot_tokens[s]))
+                    for _, s in sorted((self.slot_seq[s], s)
+                                       for s in self.active_slots)]
+        requests += [entry(req, [], req.max_new_tokens)
+                     for req in self.queue]
+        all_ids = ([r.req_id for r in self.results]
+                   + [e["req_id"] for e in requests])
+        state = {
+            "papi_snapshot": SNAPSHOT_VERSION,
+            "iteration": self.iteration,
+            "admit_seq": self._admit_seq,
+            "next_req_id": max(all_ids, default=-1) + 1,
+            "requests": requests,
+            "finished": [{"req_id": r.req_id, "reason": r.finished_reason,
+                          "tokens": list(r.tokens)} for r in self.results],
+        }
+        if path is not None:
+            write_snapshot(path, state)
+            if self.tracer.enabled:
+                self.tracer.emit("journal", self.iteration, op="snapshot",
+                                 path=str(path), requests=len(requests))
+        return state
+
+    def restore(self, path) -> dict:
+        """Re-admit every unfinished request recorded in the snapshot or
+        journal at `path` into THIS (freshly constructed) engine, through
+        the PR 6 `_ResumedRequest` path: ``prompt + committed tokens``
+        re-chunks through prefill bit-identically, so each recovered
+        stream continues exactly where the journal left off.  Finished
+        requests (including torn-tail cases whose committed prefix already
+        exhausted the budget or hit eos) are never re-admitted — finishes
+        stay exactly-once.  Deadlines resume with their remaining budget.
+        Returns a summary dict (resumed / finished / torn_bytes)."""
+        state = recover(path, eos_token=self.eos_token)
+        now = self._now()
+        for r in state.requests:
+            self.queue.append(_ResumedRequest(
+                req_id=r.req_id, prompt=list(r.prompt) + list(r.done),
+                max_new_tokens=int(r.max_new), deadline_s=r.deadline_s,
+                done=list(r.done), orig_prompt_len=r.orig_prompt_len))
+            # the deadline survives as a REMAINING monotonic delta: rebase
+            # the submit stamp to now so _deadline_expired sees exactly
+            # the budget that was left at snapshot/crash time
+            self._submit_t[r.req_id] = now
+            self.submit_iteration.setdefault(r.req_id, self.iteration)
+            self._journal_done[r.req_id] = len(r.done)
+            if self.journal is not None:
+                self.journal.append(
+                    "resume", req_id=r.req_id, prompt=list(r.prompt),
+                    done=list(r.done), max_new=int(r.max_new),
+                    dl=r.deadline_s, plen=r.orig_prompt_len)
+        self._admit_seq = max(self._admit_seq, state.admit_seq)
+        summary = {"resumed": len(state.requests),
+                   "finished": len(state.finished),
+                   "records": state.records,
+                   "torn_bytes": state.torn_bytes,
+                   "next_req_id": state.next_req_id}
+        if self.tracer.enabled:
+            self.tracer.emit("recover", self.iteration, path=str(path),
+                             **summary)
+        log.info("restored %d unfinished request(s) from %s (%d already "
+                 "finished, %d torn byte(s) discarded)",
+                 summary["resumed"], path, summary["finished"],
+                 summary["torn_bytes"])
+        return summary
 
     # ------------------------------------------------------------- internals
     def _cache_shardings(self, cfg: ModelConfig):
@@ -1177,6 +1361,15 @@ class PapiEngine:
             toks, plen = req.done + list(tokens), req.orig_prompt_len
         else:
             toks, plen = list(tokens), len(req.prompt)
+        if self.journal is not None:
+            # WAL discipline: the finish record (carrying the tail since
+            # the last commit) goes durable BEFORE the result is
+            # externalized, so a durable consumer sees finishes
+            # exactly-once across a crash
+            prev = self._journal_done.pop(req.req_id, 0)
+            self.journal.append("finish", req_id=req.req_id, reason=reason,
+                                toks=toks[prev:], n=len(toks),
+                                it=self.iteration)
         self.results.append(ServeResult(
             req.req_id, toks, plen, self.iteration, reason,
             **self._latency_fields(req.req_id, len(toks))))
@@ -1271,6 +1464,9 @@ class PapiEngine:
             self.kv.release(victim)
         self.preemptions += 1
         self.preempted_ids.add(req.req_id)
+        if self.journal is not None:
+            self.journal.append("preempt", req_id=req.req_id,
+                                done=len(done), it=self.iteration)
         if self.tracer.enabled:
             self.tracer.emit("preempt", self.iteration, req_id=req.req_id,
                              slot=victim, done=len(done))
@@ -1338,6 +1534,13 @@ class PapiEngine:
         self.slot_seq[slot] = self._admit_seq
         self.admit_iteration.setdefault(req.req_id, self.iteration)
         self._admit_t.setdefault(req.req_id, self._now())
+        if self.journal is not None:
+            # the admission-CLAMPED budget: re-admission after recovery
+            # clamps the same way preemption does, so replay must see the
+            # effective value, not the caller's max_new_tokens
+            self.journal.append("admit", req_id=req.req_id, slot=slot,
+                                budget=int(self.slot_budget[slot]),
+                                it=self.iteration)
         if self.tracer.enabled:
             self.tracer.emit("admit", self.iteration, req_id=req.req_id,
                              slot=slot, prompt_len=len(req.prompt))
@@ -1643,6 +1846,14 @@ class PapiEngine:
             # events emitted anywhere below (including by the page manager,
             # which doesn't know the iteration) default to this step index
             self.tracer.iteration = self.iteration
+        if self.faults is not None and self.faults.crash_now(self.iteration):
+            # simulated process death: no cleanup, no emission, no journal
+            # finalization — exactly what recovery must cope with
+            if self.tracer.enabled:
+                self.tracer.emit("fault", self.iteration, fault="crash")
+            raise EngineCrashError(
+                f"injected crash at iteration {self.iteration}",
+                self.iteration)
         if self.faults is not None:
             delay = self.faults.step_delay(self.iteration)
             if delay > 0:
@@ -1776,6 +1987,9 @@ class PapiEngine:
             self.slot_last[s] = 0
             if self.kv is not None:
                 self.kv.release(s)
+
+        if self.journal is not None:
+            self._journal_commits()
 
         # park inactive slots at pos=1 so their garbage decode can't creep
         # past the cache capacity (they are masked from outputs anyway).

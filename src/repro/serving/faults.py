@@ -26,6 +26,12 @@ Fault taxonomy (what each kind models, and which guard catches it):
                 straggler shard).  Nothing to "catch" — it exists so the
                 deadline machinery (`ServeRequest.deadline_s`) can be
                 exercised against a deterministically slow engine.
+  ``crash``     Process death at the top of the iteration: the engine
+                raises `EngineCrashError` with NO cleanup — results,
+                pages, and journal tail are simply lost.  Caught by the
+                durability layer (`serving/journal.py`): a fresh engine
+                `restore()`s from the write-ahead journal and the
+                recovered streams are bit-identical continuations.
 
 Determinism: every decision is a pure function of ``(seed, iteration)``
 (`numpy.random.default_rng([seed, step])`), so a run replays exactly
@@ -53,7 +59,7 @@ FAULT_NONE = 0
 FAULT_NAN = 1
 FAULT_INF = 2
 
-KINDS = ("admit", "nan", "kernel", "latency")
+KINDS = ("admit", "nan", "kernel", "latency", "crash")
 
 
 @dataclasses.dataclass
@@ -72,6 +78,7 @@ class FaultInjector:
     kernel_p: float = 0.0
     latency_p: float = 0.0
     latency_s: float = 0.002
+    crash_p: float = 0.0
     start: int = 0
     stop: int | None = None
 
@@ -80,9 +87,12 @@ class FaultInjector:
 
     # ------------------------------------------------------------- schedule
     def _draws(self, step: int) -> np.ndarray:
-        """Four uniforms, a pure function of (seed, step): one per kind, so
-        the kinds fire independently and a repeated consult replays."""
-        return np.random.default_rng([self.seed, int(step)]).random(4)
+        """Five uniforms, a pure function of (seed, step): one per kind, so
+        the kinds fire independently and a repeated consult replays.  The
+        crash draw was APPENDED — `Generator.random(n)` consumes the
+        bitstream sequentially, so the first four uniforms (and therefore
+        every pre-existing fault schedule) are unchanged."""
+        return np.random.default_rng([self.seed, int(step)]).random(5)
 
     def _active(self, step: int) -> bool:
         return step >= self.start and (self.stop is None or step < self.stop)
@@ -117,6 +127,14 @@ class FaultInjector:
             return self.latency_s
         return 0.0
 
+    def crash_now(self, step: int) -> bool:
+        """Kill the engine at the top of this iteration (the engine raises
+        `EngineCrashError` and performs NO cleanup — the whole point)."""
+        hit = self._active(step) and self._draws(step)[4] < self.crash_p
+        if hit:
+            self.counts["crash"] += 1
+        return hit
+
 
 def parse_fault_specs(specs: list[str], *, seed: int = 0,
                       latency_s: float = 0.002) -> FaultInjector | None:
@@ -147,4 +165,5 @@ def parse_fault_specs(specs: list[str], *, seed: int = 0,
         probs[kind] = p
     return FaultInjector(seed=seed, admit_p=probs["admit"],
                          nan_p=probs["nan"], kernel_p=probs["kernel"],
-                         latency_p=probs["latency"], latency_s=latency_s)
+                         latency_p=probs["latency"], latency_s=latency_s,
+                         crash_p=probs["crash"])

@@ -84,6 +84,10 @@ EVENT_KINDS = frozenset({
     "page_reserve",  # admission reserved a budget      {slot, budget_pages,
                      #   mapped_pages}
     "stall",         # EngineStallError snapshot        {snapshot}
+    "journal",       # WAL lifecycle                    {op, path, ...}
+                     #   op="open" (torn tail truncated) / "snapshot"
+    "recover",       # restore() re-admitted work       {path, resumed,
+                     #   finished, records, torn_bytes, next_req_id}
 })
 
 
@@ -376,7 +380,8 @@ def export_chrome(tracer) -> dict:
             rec["s"] = "t"
             out.append(rec)
         elif ev.kind in ("submit", "defer", "fault", "degraded", "stall",
-                         "page_map", "page_unmap", "page_reserve"):
+                         "page_map", "page_unmap", "page_reserve",
+                         "journal", "recover"):
             rec = base(ev, QUEUE_TID, "i", ev.kind)
             rec["s"] = "t"
             out.append(rec)

@@ -1,0 +1,373 @@
+"""Durability: write-ahead journal, snapshot/restore, crash recovery.
+
+The contract under test (docs/ARCHITECTURE.md, "Durability & crash
+recovery"):
+
+  * the journal's framed records survive round-trips, and the reader
+    discards exactly the torn tail — the first truncated / corrupt
+    record and everything after it;
+  * `Journal` reopened on an existing path physically truncates the torn
+    tail, so a recovered engine appends to the SAME file and replay of
+    the extended journal equals the uninterrupted history;
+  * crash at iteration k (the deterministic ``crash`` fault, NO cleanup)
+    -> `recover()` the durable finishes -> fresh engine `restore()` ->
+    the union of durable + post-crash streams covers every journaled
+    request EXACTLY ONCE, bit-identical to the uninterrupted oracle —
+    for greedy and speculative, dense and paged KV (property-tested over
+    crash point and torn-tail length via tests/_propcompat.py);
+  * `replay` synthesizes a finish for a request whose committed prefix
+    already exhausted its budget or hit eos (its finish record was torn
+    away AFTER the result was externalized) — never re-runs it;
+  * remaining deadlines survive the restart as monotonic deltas: a
+    nearly-expired request times out shortly after recovery, a fresh one
+    does not;
+  * closing the `serve()` generator early aborts in-flight requests
+    honestly, drains the pool, and leaves the engine reusable.
+"""
+import json
+import tempfile
+from pathlib import Path
+
+import jax
+import pytest
+from _propcompat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (EngineCrashError, FaultInjector, Journal,
+                           PapiEngine, ServeRequest, parse_fault_specs,
+                           read_records, recover, replay)
+from repro.serving.journal import FLUSH_POLICIES, scan
+
+NO_EOS = get_config("qwen2-0.5b").reduced().vocab_size - 1
+
+# four requests of staggered length: some finish before any crash point,
+# some after, so every recovery splits durable-vs-resumed nontrivially
+REQS = [([3 + i, 5, 7], 6 + 2 * i) for i in range(4)]
+
+# module-level model cache: the _propcompat fallback runner can't mix
+# pytest fixtures with @given, and the property test shares the oracle
+_CACHE: dict = {}
+
+
+def _model():
+    if "model" not in _CACHE:
+        cfg = get_config("qwen2-0.5b").reduced()
+        _CACHE["model"] = (cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                           init_params(cfg, jax.random.PRNGKey(9)))
+    return _CACHE["model"]
+
+
+def _engine(layout="dense", spec=1, **kw):
+    cfg, params, draft_params = _model()
+    d = dict(max_slots=4, cache_capacity=64, prefill_len=8, alpha=6.0,
+             eos_token=NO_EOS, debug_invariants=True)
+    if spec > 1:
+        d.update(spec_len=spec, draft=(cfg, draft_params))
+    if layout == "paged":
+        d.update(kv_layout="paged", page_size=4)
+    d.update(kw)
+    return PapiEngine(cfg, params, **d)
+
+
+def _submit_all(eng):
+    for i, (prompt, n) in enumerate(REQS):
+        eng.submit(ServeRequest(i, list(prompt), max_new_tokens=n))
+
+
+def _oracle(layout, spec):
+    key = ("oracle", layout, spec)
+    if key not in _CACHE:
+        eng = _engine(layout, spec)
+        _submit_all(eng)
+        _CACHE[key] = {r.req_id: r.tokens
+                       for r in eng.run(max_iterations=400)}
+    return _CACHE[key]
+
+
+# ------------------------------------------------------------ journal file
+
+def test_framing_roundtrip(tmp_path):
+    path = tmp_path / "a.wal"
+    with Journal(path) as j:
+        j.append("submit", req_id=0, prompt=[1, 2, 3], max_new=8, dl=None)
+        j.append("commit", req_id=0, toks=[5, 6], n=2, rem=6, dl=None, it=1)
+        j.append("finish", req_id=0, reason="length", toks=[7], n=3, it=2)
+    records, torn = read_records(path)
+    assert torn == 0
+    assert [r["k"] for r in records] == ["submit", "commit", "finish"]
+    assert records[0]["prompt"] == [1, 2, 3]
+    assert records[2]["toks"] == [7]
+    with pytest.raises(AssertionError):
+        Journal(tmp_path / "b.wal").append("not-a-kind", req_id=0)
+
+
+def test_torn_tail_stops_reader_and_reopen_truncates(tmp_path):
+    path = tmp_path / "torn.wal"
+    with Journal(path) as j:
+        for i in range(5):
+            j.append("commit", req_id=0, toks=[i], n=i + 1, rem=5 - i,
+                     dl=None, it=i)
+    whole = path.read_bytes()
+    cut = whole[:-9]                         # tear the last record
+    path.write_bytes(cut)
+    records, torn = read_records(path)
+    assert len(records) == 4
+    assert torn == len(cut) - (cut.rfind(b"\n") + 1) > 0
+    # reopening physically truncates, so appends extend a valid prefix
+    j2 = Journal(path)
+    assert j2.records_kept == 4 and j2.truncated_bytes == torn
+    j2.append("commit", req_id=0, toks=[9], n=5, rem=1, dl=None, it=9)
+    j2.close()
+    records, torn = read_records(path)
+    assert torn == 0 and len(records) == 5 and records[-1]["toks"] == [9]
+
+
+def test_checksum_corruption_stops_reader(tmp_path):
+    path = tmp_path / "corrupt.wal"
+    with Journal(path) as j:
+        for i in range(4):
+            j.append("preempt", req_id=i, done=i, it=i)
+    data = bytearray(path.read_bytes())
+    lines = bytes(data).split(b"\n")
+    # flip one byte inside record 1's json body
+    off = len(lines[0]) + 1 + lines[1].rfind(b"}")
+    data[off - 2] ^= 0xFF
+    records, valid_end, total = scan(bytes(data))
+    assert len(records) == 1 and valid_end < total
+
+
+def test_flush_policies(tmp_path):
+    with pytest.raises(ValueError):
+        Journal(tmp_path / "x.wal", flush="never")
+    assert set(FLUSH_POLICIES) == {"fsync", "flush", "lazy"}
+    lazy = Journal(tmp_path / "lazy.wal", flush="lazy")
+    lazy.append("cancel", req_id=0, it=0)
+    assert (tmp_path / "lazy.wal").stat().st_size == 0   # still buffered
+    lazy.close()
+    assert read_records(tmp_path / "lazy.wal")[0][0]["k"] == "cancel"
+    sync = Journal(tmp_path / "sync.wal", flush="fsync")
+    sync.append("cancel", req_id=1, it=0)
+    assert read_records(tmp_path / "sync.wal")[0][0]["k"] == "cancel"
+    sync.close()
+
+
+# ------------------------------------------------------------------ replay
+
+def test_replay_folds_and_orders():
+    recs = [
+        {"k": "submit", "req_id": 0, "prompt": [1, 2], "max_new": 9,
+         "dl": None},
+        {"k": "submit", "req_id": 1, "prompt": [3], "max_new": 4, "dl": 2.5},
+        {"k": "admit", "req_id": 0, "slot": 0, "budget": 8, "it": 0},
+        {"k": "commit", "req_id": 0, "toks": [7, 8], "n": 2, "rem": 6,
+         "dl": None, "it": 1},
+        {"k": "preempt", "req_id": 0, "done": 2, "it": 2},
+    ]
+    state = replay(recs)
+    # preemption requeues at the back: recovery keeps that order
+    assert state.req_ids == [1, 0]
+    r0 = state.requests[1]
+    assert r0.done == [7, 8] and r0.max_new == 6 and r0.prompt == [1, 2]
+    assert state.requests[0].deadline_s == 2.5
+    assert state.next_req_id == 2 and not state.finished
+
+
+def test_replay_synthesizes_torn_finish():
+    base = [{"k": "submit", "req_id": 0, "prompt": [1], "max_new": 3,
+             "dl": None},
+            {"k": "admit", "req_id": 0, "slot": 0, "budget": 3, "it": 0}]
+    # budget exhausted by the last durable commit; finish record torn away
+    state = replay(base + [{"k": "commit", "req_id": 0, "toks": [5, 6, 7],
+                            "n": 3, "rem": 0, "dl": None, "it": 2}])
+    assert not state.requests
+    fin = state.finished[0]
+    assert fin.synthesized and fin.reason == "length"
+    assert fin.tokens == [5, 6, 7]
+    # same for an eos tail with budget remaining
+    state = replay(base + [{"k": "commit", "req_id": 0, "toks": [5, 99],
+                            "n": 2, "rem": 1, "dl": None, "it": 1}],
+                   eos_token=99)
+    assert not state.requests
+    assert state.finished[0].synthesized
+    assert state.finished[0].reason == "eos"
+    # without eos knowledge the request is (correctly) re-admitted
+    state = replay(base + [{"k": "commit", "req_id": 0, "toks": [5, 99],
+                            "n": 2, "rem": 1, "dl": None, "it": 1}])
+    assert state.req_ids == [0]
+
+
+# ------------------------------------------------------------- crash fault
+
+def test_crash_fault_deterministic_and_windowed():
+    a = FaultInjector(seed=7, crash_p=0.5)
+    b = FaultInjector(seed=7, crash_p=0.5)
+    seq = [a.crash_now(s) for s in range(64)]
+    assert seq == [b.crash_now(s) for s in range(64)]
+    assert any(seq) and not all(seq)
+    assert a.counts["crash"] == sum(seq)
+    w = FaultInjector(seed=7, crash_p=1.0, start=5, stop=6)
+    assert [w.crash_now(s) for s in range(8)] == [False] * 5 + [True,
+                                                                False, False]
+    assert not FaultInjector(seed=7).crash_now(3)
+
+
+def test_parse_fault_specs_crash():
+    inj = parse_fault_specs(["crash:0.25"])
+    assert inj.crash_p == 0.25 and inj.nan_p == 0.0
+    inj = parse_fault_specs(["crash", "nan:0.1"])
+    assert inj.crash_p == 1.0 and inj.nan_p == 0.1
+    with pytest.raises(ValueError):
+        parse_fault_specs(["crash:1.5"])
+    with pytest.raises(ValueError):
+        parse_fault_specs(["crash:x"])
+
+
+# ------------------------------------------------- crash -> restore -> run
+
+def _crash_and_recover(layout, spec, k, wal, truncate=0):
+    """Crash at iteration k, optionally tear `truncate` bytes off the
+    journal, then restore a FRESH engine and complete.  Returns
+    (durable finishes, post-crash results, surviving submit ids)."""
+    eng = _engine(layout, spec, journal=wal,
+                  faults=FaultInjector(seed=0, crash_p=1.0,
+                                       start=k, stop=k + 1))
+    _submit_all(eng)
+    with pytest.raises(EngineCrashError) as exc:
+        eng.run(max_iterations=400)
+    assert exc.value.iteration == k
+    if truncate:
+        data = Path(wal).read_bytes()
+        Path(wal).write_bytes(data[:max(0, len(data) - truncate)])
+    records, _ = read_records(wal)
+    known = {int(r["req_id"]) for r in records if r["k"] == "submit"}
+    durable = {rid: f.tokens
+               for rid, f in recover(wal, eos_token=NO_EOS).finished.items()}
+    fresh = _engine(layout, spec, journal=wal)
+    fresh.restore(wal)
+    after = {r.req_id: r.tokens for r in fresh.run(max_iterations=400)}
+    return durable, after, known
+
+
+@pytest.mark.parametrize("layout,spec", [("dense", 1), ("paged", 2)])
+def test_crash_recovery_bit_identical(layout, spec, tmp_path):
+    """Crash mid-trace -> recover -> the union of durable + post-crash
+    streams is the oracle, exactly once — and replay of the SAME journal
+    file (extended by the recovered engine) equals the full history."""
+    oracle = _oracle(layout, spec)
+    wal = str(tmp_path / "crash.wal")
+    durable, after, known = _crash_and_recover(layout, spec, 3, wal)
+    assert known == set(oracle)
+    assert not set(durable) & set(after)          # exactly-once finishes
+    union = {**durable, **after}
+    assert union == oracle                        # bit-identical
+    # the recovered engine appended to the same file: replaying the
+    # extended journal reconstructs the uninterrupted history
+    final = recover(wal, eos_token=NO_EOS)
+    assert not final.requests
+    assert {rid: f.tokens for rid, f in final.finished.items()} == oracle
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=160),
+       st.sampled_from(["dense", "paged"]))
+def test_crash_consistency_property(k, cut, layout):
+    """Fuzz (crash iteration, torn-tail length, KV layout): every request
+    whose submit record survived the tear completes exactly once with the
+    oracle's stream — no duplicate finish, no lost committed token."""
+    oracle = _oracle(layout, 1)
+    with tempfile.TemporaryDirectory() as td:
+        wal = str(Path(td) / "p.wal")
+        durable, after, known = _crash_and_recover(layout, 1, k, wal,
+                                                   truncate=cut)
+    assert not set(durable) & set(after)
+    union = {**durable, **after}
+    assert set(union) == known
+    for rid in known:
+        assert union[rid] == oracle[rid], rid
+
+
+# -------------------------------------------------------- snapshot/restore
+
+def test_snapshot_restore_completes(tmp_path):
+    oracle = _oracle("dense", 1)
+    eng = _engine(faults=FaultInjector(seed=0, crash_p=1.0, start=3,
+                                       stop=4))
+    _submit_all(eng)
+    with pytest.raises(EngineCrashError):
+        eng.run(max_iterations=400)
+    snap = tmp_path / "engine.snap.json"
+    state = eng.snapshot(str(snap))
+    assert state["papi_snapshot"] == 1
+    pre = {r.req_id: r.tokens for r in eng.results}
+    fresh = _engine()
+    info = fresh.restore(str(snap))
+    assert info["resumed"] == len(state["requests"])
+    after = {r.req_id: r.tokens for r in fresh.run(max_iterations=400)}
+    assert not set(pre) & set(after)
+    assert {**pre, **after} == oracle
+
+
+def test_deadline_survives_restart_both_directions(tmp_path):
+    """Satellite: deadlines persist as REMAINING monotonic deltas.  After
+    recovery on a machine whose clock jumped far ahead, the nearly-expired
+    request still times out on its remaining budget (keeping its committed
+    tokens) while the fresh request completes in full."""
+    oracle = _oracle("dense", 1)
+    eng = _engine(faults=FaultInjector(seed=0, crash_p=1.0, start=4,
+                                       stop=5))
+    clock = {"now": 100.0}
+    eng._now = lambda: clock["now"]
+    for i, (prompt, n) in enumerate(REQS):
+        eng.submit(ServeRequest(i, list(prompt), max_new_tokens=n,
+                                deadline_s=5.0 if i == 0 else 1000.0))
+    with pytest.raises(EngineCrashError):
+        eng.run(max_iterations=400)
+    clock["now"] = 104.8          # request 0 has 0.2s of deadline left
+    snap = tmp_path / "dl.snap.json"
+    eng.snapshot(str(snap))
+    by_id = {r["req_id"]: r for r in
+             json.loads(snap.read_text())["requests"]}
+    assert by_id[0]["deadline_s"] == pytest.approx(0.2)
+    assert by_id[3]["deadline_s"] == pytest.approx(995.2)
+
+    fresh = _engine()
+    c2 = {"now": 1e6}             # wall clock far-jumped across the restart
+    fresh._now = lambda: c2["now"]
+    fresh.restore(str(snap))
+    done0 = {r.req_id: list(r.done) for r in fresh.queue}[0]
+    c2["now"] = 1e6 + 0.5         # past 0's remaining 0.2s, inside 3's
+    got = {r.req_id: r for r in fresh.run(max_iterations=400)}
+    assert got[0].finished_reason == "timeout"
+    # committed tokens kept, stream still an oracle prefix, cut short
+    assert len(done0) <= len(got[0].tokens) < len(oracle[0])
+    assert got[0].tokens == oracle[0][:len(got[0].tokens)]
+    for rid in (1, 2, 3):
+        if rid in got:            # finished pre-crash otherwise
+            assert got[rid].finished_reason == "length"
+            assert got[rid].tokens == oracle[rid]
+
+
+# ----------------------------------------------------- serve() early close
+
+def test_serve_early_close_aborts_and_stays_usable():
+    """Satellite: breaking out of the serve() generator mid-stream aborts
+    in-flight requests honestly, drains the page pool, and the engine
+    remains usable for a subsequent submit() + run()."""
+    eng = _engine("paged")
+    sched = [[ServeRequest(i, list(p), max_new_tokens=n)
+              for i, (p, n) in enumerate(REQS)]]
+    for ev in eng.serve(sched):
+        break                     # close the generator after one event
+    assert not eng.active_slots
+    aborted = [r for r in eng.results if r.finished_reason == "aborted"]
+    assert aborted                # in-flight requests were finished
+    eng.kv.alloc.check()
+    assert eng.kv.alloc.mapped_count == 0
+    assert eng.kv.alloc.free_count == eng.kv.alloc.num_pages
+    # the engine is reusable: queued requests + a new one complete offline
+    eng.submit(ServeRequest(99, [11, 13], max_new_tokens=4))
+    later = {r.req_id: r for r in eng.run(max_iterations=400)}
+    assert later[99].finished_reason == "length"
+    assert len(later[99].tokens) == 4

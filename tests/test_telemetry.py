@@ -157,6 +157,10 @@ def test_all_exporters_cover_every_event_kind(tmp_path):
         "page_unmap": dict(slot=0, pages=2, cause="finish"),
         "page_reserve": dict(slot=0, budget_pages=4, mapped_pages=2),
         "stall": dict(snapshot={"iteration": 5}),
+        "journal": dict(op="open", path="wal.j", records=0,
+                        truncated_bytes=0),
+        "recover": dict(path="wal.j", resumed=2, finished=1, records=9,
+                        torn_bytes=0, next_req_id=3),
     }
     assert set(emitters) == set(EVENT_KINDS), \
         "extend this test when the vocabulary grows"

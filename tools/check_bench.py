@@ -37,7 +37,14 @@ Checks over BENCH_engine.json (written/merged by
      iteration, and zero steady-state recompiles — the regressions this
      guards are an un-batched sync creeping onto the hot path and a flag
      flip retracing under an existing jit-cache key (the seed bug PL003
-     checks statically).
+     checks statically);
+  7. the ``recovery`` section (the --crash-recovery durability gate)
+     shows, for EVERY serving combo (greedy/speculative x dense/paged),
+     all requests completed across the crash, ZERO duplicate finishes,
+     and recovered token streams bit-identical to the uninterrupted
+     oracle — the regressions this guards are the write-ahead journal
+     losing committed tokens, replay re-emitting a finished request, and
+     the resumed-prefill path drifting off the deterministic re-decode.
 
 A missing or truncated section is reported as a named-section failure
 ("BENCH section 'X' missing ...") with the engine_hotpath invocation that
@@ -274,6 +281,45 @@ def main() -> int:
                       f"iterations at exactly {rep['transfer_budget']} "
                       "transfer(s)/iter, 0 recompiles — OK")
 
+    hint = "benchmarks/engine_hotpath.py --crash-recovery"
+    rec = get_section(bench, "recovery", hint, failures)
+    if rec is not None and need_keys(
+            rec, "recovery", ["crash_points", "modes"], hint, failures):
+        modes = rec["modes"]
+        if not modes:
+            failures.append(f"BENCH section 'recovery' has no modes — run "
+                            f"{hint}")
+        bad = False
+        for label, mode in sorted(modes.items()):
+            name = f"recovery.{label}"
+            if not need_keys(mode, name,
+                             ["completed", "duplicate_finishes",
+                              "tokens_bit_identical"], hint, failures):
+                bad = True
+                continue
+            if mode["completed"] is not True:
+                failures.append(
+                    f"{name}: requests lost across the crash (journal "
+                    "replay dropped a submit/commit?)")
+                bad = True
+            if mode["duplicate_finishes"] != 0:
+                failures.append(
+                    f"{name}: {mode['duplicate_finishes']} duplicate "
+                    "finish(es) — a request was re-emitted after its "
+                    "finish record was already durable")
+                bad = True
+            # tokens_bit_identical itself rides check 1; report the
+            # per-mode context here so the failure names the combo.
+            if mode["tokens_bit_identical"] is not True:
+                failures.append(
+                    f"{name}: recovered streams diverged from the "
+                    "uninterrupted oracle")
+                bad = True
+        if not bad and modes:
+            print(f"recovery: {len(modes)} combos survived crashes at "
+                  f"{rec['crash_points']} with exactly-once finishes and "
+                  "bit-identical streams — OK")
+
     if failures:
         for f in failures:
             print(f"check_bench FAIL: {f}")
@@ -281,7 +327,8 @@ def main() -> int:
     print(f"check_bench: {len(flags)} identity flags true, paged "
           "speculative above floor, pressure trace bounded, arrivals "
           "trace completed within the TTFT ceiling, telemetry overhead "
-          "under the ceiling, sanitize budgets exact")
+          "under the ceiling, sanitize budgets exact, crash recovery "
+          "exactly-once and bit-identical")
     return 0
 
 

@@ -40,7 +40,7 @@ from pathlib import Path
 EVENT_KINDS = frozenset({
     "submit", "admit", "first_token", "finish", "preempt", "defer",
     "scheduler", "iteration", "pool", "fault", "degraded", "program",
-    "page_map", "page_unmap", "page_reserve", "stall",
+    "page_map", "page_unmap", "page_reserve", "stall", "journal", "recover",
 })
 
 PROGRAM_FIELDS = ("count", "total_s", "mean_s", "min_s", "max_s")
