@@ -619,12 +619,20 @@ class PapiEngine:
         no events can be yielded during GeneratorExit), the page pool
         drains, queued requests stay queued, and the engine remains
         usable for a subsequent ``submit()`` + ``run()``.
+
+        An exception propagating out of ``step()`` — `EngineCrashError`
+        from the ``crash`` fault, `EngineStallError`, ... — is a
+        (simulated) process death, NOT an early close: it re-raises with
+        no abort cleanup and no journal finalization, so a journaled run
+        recovers the in-flight requests via ``--resume`` instead of
+        finding them durably marked "aborted".
         """
         arrivals = iter(arrivals)
         streamed: dict[int, int] = {}   # req_id -> tokens already yielded
         reported = len(self.results)    # results already turned into events
         stream_open = True
         completed = False
+        crashed = False
         prev = self.stream_chunks
         self.stream_chunks = True
         try:
@@ -667,9 +675,19 @@ class PapiEngine:
                 new_reported = len(self.results)
                 yield from self._drain_events(streamed, reported)
                 reported = new_reported
+        except GeneratorExit:
+            raise                 # early close: the finally abort applies
+        except BaseException:
+            # EngineCrashError / EngineStallError / anything else escaping
+            # step() is a (simulated) process death, not an early close:
+            # re-raise with NO cleanup and NO journal finalization, so the
+            # in-flight requests stay recoverable (journal "aborted"
+            # finishes here would make --resume skip them forever).
+            crashed = True
+            raise
         finally:
             self.stream_chunks = prev
-            if not completed:
+            if not completed and not crashed:
                 # the caller broke out of / close()d the generator
                 # mid-stream: finish the in-flight slots honestly
                 # ("aborted", tokens-so-far) so the page pool drains and

@@ -214,6 +214,7 @@ def replay(records: Iterable[dict], *, eos_token: int | None = None,
     committed token is ``eos_token`` — lost only its finish record to the
     torn tail; it is synthesized into the finished set instead of being
     re-admitted, which is what makes finishes exactly-once."""
+    records = list(records)
     pend: dict[int, dict] = {}
     finished: dict[int, FinishedRequest] = {}
     max_rid = -1
@@ -264,9 +265,7 @@ def replay(records: Iterable[dict], *, eos_token: int | None = None,
             max_new=int(e["rem"]), deadline_s=e["dl"],
             orig_prompt_len=int(e["plen"])))
     return RecoveredState(requests=requests, finished=finished,
-                          next_req_id=max_rid + 1,
-                          records=sum(1 for _ in records)
-                          if not isinstance(records, list) else len(records),
+                          next_req_id=max_rid + 1, records=len(records),
                           torn_bytes=torn_bytes)
 
 
@@ -275,13 +274,26 @@ SNAPSHOT_VERSION = 1
 
 
 def write_snapshot(path: str | Path, state: dict) -> None:
-    """Atomically write an engine snapshot dict (tmp + rename, so a crash
-    mid-snapshot never leaves a half-written file where restore expects a
-    consistent one)."""
+    """Atomically write an engine snapshot dict: tmp + fsync + rename +
+    directory fsync, so neither a process crash nor a power loss
+    mid-snapshot leaves a half-written file where restore expects a
+    consistent one (without the data fsync the rename can survive a power
+    loss while the bytes do not)."""
     path = Path(path)
     tmp = path.with_suffix(path.suffix + ".tmp")
-    tmp.write_text(json.dumps(state, indent=2) + "\n")
+    with open(tmp, "w") as fh:
+        fh.write(json.dumps(state, indent=2) + "\n")
+        fh.flush()
+        os.fsync(fh.fileno())
     os.replace(tmp, path)
+    try:
+        dfd = os.open(path.parent, os.O_RDONLY)
+    except OSError:               # platform can't open directories
+        return
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def _snapshot_state(snap: dict) -> RecoveredState:

@@ -22,7 +22,9 @@ recovery"):
     nearly-expired request times out shortly after recovery, a fresh one
     does not;
   * closing the `serve()` generator early aborts in-flight requests
-    honestly, drains the pool, and leaves the engine reusable.
+    honestly, drains the pool, and leaves the engine reusable — but a
+    crash PROPAGATING out of `serve()` runs no cleanup and journals no
+    finalization, so the in-flight requests recover via restore().
 """
 import json
 import tempfile
@@ -371,3 +373,43 @@ def test_serve_early_close_aborts_and_stays_usable():
     later = {r.req_id: r for r in eng.run(max_iterations=400)}
     assert later[99].finished_reason == "length"
     assert len(later[99].tokens) == 4
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_serve_crash_is_recoverable_not_aborted(layout, tmp_path):
+    """Regression: `EngineCrashError` escaping the serve() generator is a
+    simulated process death, NOT an early close — it must skip the finally
+    abort cleanup entirely.  Journaling "aborted" finishes there would
+    durably mark the in-flight requests done, so --resume would skip them
+    and their remaining tokens would be silently lost."""
+    oracle = _oracle(layout, 1)
+    wal = str(tmp_path / "serve-crash.wal")
+    eng = _engine(layout, journal=wal,
+                  faults=FaultInjector(seed=0, crash_p=1.0, start=3,
+                                       stop=4))
+    sched = [[ServeRequest(i, list(p), max_new_tokens=n)
+              for i, (p, n) in enumerate(REQS)]]
+    streamed: dict[int, list[int]] = {}
+    with pytest.raises(EngineCrashError) as exc:
+        for ev in eng.serve(sched):
+            if not ev.finished:
+                streamed.setdefault(ev.req_id, []).append(ev.token)
+    assert exc.value.iteration == 3
+    # no cleanup ran: slots are still live and nothing was finalized in
+    # the journal as "aborted" (or at all, for the in-flight requests)
+    assert eng.active_slots
+    records, _ = read_records(wal)
+    assert not any(r["k"] == "finish" and r["reason"] == "aborted"
+                   for r in records)
+    # recovery re-admits the in-flight requests and completes them
+    # bit-identically to the oracle, finishes exactly-once
+    durable = {rid: f.tokens
+               for rid, f in recover(wal, eos_token=NO_EOS).finished.items()}
+    fresh = _engine(layout, journal=wal)
+    fresh.restore(wal)
+    after = {r.req_id: r.tokens for r in fresh.run(max_iterations=400)}
+    assert not set(durable) & set(after)
+    assert {**durable, **after} == oracle
+    # every token streamed before the crash was an oracle prefix
+    for rid, toks in streamed.items():
+        assert toks == oracle[rid][:len(toks)], rid
